@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import pathlib
+import pickle
+import subprocess
+import sys
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeats * 1e6
+
+
+def run_subprocess(code: str, devices: int = 0, timeout: int = 2400) -> str:
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env,
+                       cwd=str(RESULTS.parent))
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-3000:])
+    return r.stdout
+
+
+def load_scenario1():
+    # prefer the constraint-exact cayley-mode run (100% accuracy)
+    for name in ("scenario1_cayley_params.pkl", "scenario1_params.pkl"):
+        p = RESULTS / name
+        if p.exists():
+            with open(p, "rb") as f:
+                return pickle.load(f)
+    return None

@@ -1,0 +1,71 @@
+"""Paper Fig. 6: communication data (normalized by gradient bytes) for
+ring all-reduce vs OptINC at N = 4, 8, 16 servers.
+
+Two measurements:
+  analytic — the paper's model: ring moves 2(N-1)/N units per direction
+             (reduce-scatter + all-gather); OptINC moves exactly 1 unit
+             (one send, one receive through the optical network).
+  measured — the per-device wire bytes parsed from the COMPILED HLO of the
+             paper-LLaMA train step on an N-device mesh, for sync modes
+             ring / optinc / psum (this framework's programs, not formulas).
+"""
+from __future__ import annotations
+
+import json
+
+from .common import emit, run_subprocess
+
+MEASURE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import json
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.core.collective import SyncConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step
+from repro.launch.roofline import parse_collectives
+from repro.launch.dryrun import batch_sds, opt_sds
+from repro.models import lm
+from repro.optim import AdamWConfig
+
+cfg = configs.get("paper_llama")
+mesh = make_mesh(({n}, 1), ("data", "model"))
+out = {{}}
+p_sds = None
+for mode in ("ring", "optinc", "psum"):
+    sync = SyncConfig(mode=mode, axes=("data",), bits=8, block=2048)
+    step, _, _ = make_train_step(cfg, mesh, sync, AdamWConfig())
+    from repro.launch.steps import make_ctx
+    ctx = make_ctx(mesh)
+    p_sds = lm.param_shape_dtype(cfg, ctx)
+    args = (p_sds, opt_sds(p_sds), batch_sds(cfg, 512, {n}),
+            jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(step).lower(*args).compile()
+    colls = parse_collectives(compiled.as_text())
+    total = sum(v["bytes"] for v in colls.values())
+    out[mode] = {{"colls": colls, "result_bytes": total}}
+nparams = sum(s.size for s in jax.tree.leaves(p_sds))
+out["grad_bytes_bf16"] = nparams * 2
+print(json.dumps(out))
+"""
+
+
+def main(full: bool = False):
+    for n in (4, 8, 16):
+        ring = 2 * (n - 1) / n
+        emit(f"fig6.analytic.N{n}", 0.0,
+             f"ring={ring:.3f} optinc=1.0 overhead_eliminated={(n - 2) / n:.3f}")
+    for n in ((4, 8, 16) if full else (8,)):
+        stdout = run_subprocess(MEASURE.format(n=n), timeout=2400)
+        rec = json.loads(stdout.strip().splitlines()[-1])
+        gb = rec["grad_bytes_bf16"]
+        for mode in ("ring", "optinc", "psum"):
+            rb = rec[mode]["result_bytes"]
+            emit(f"fig6.measured_hlo.N{n}.{mode}", 0.0,
+                 f"collective_result_bytes={rb} norm_vs_bf16_grads={rb / gb:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig. 7b: modeled per-step latency breakdown, ring vs OptINC.
+
+The paper's setting: H100-class GPUs, 60 TFLOP/s effective x 0.6
+utilization, 8 full-duplex 800 Gb/s transceivers, 4 servers. We reproduce
+that model and additionally re-parameterize it for TPU v5e (197 TFLOP/s
+bf16, 4x50 GB/s ICI links) — the target of this framework.
+"""
+from __future__ import annotations
+
+from .common import emit
+
+GPU_FLOPS = 60e12 * 0.6
+GPU_BW = 8 * 800e9 / 8          # bytes/s aggregate (800 Gb/s x 8 lanes)
+V5E_FLOPS = 197e12 * 0.6
+V5E_BW = 4 * 50e9
+
+MODELS = {
+    # (flops per sample fwd+bwd, gradient bytes, batch per step)
+    # ResNet50 @ CIFAR-100: ~3.9 GFLOP fwd x3; grads 25.6M params x 4B
+    "resnet50": (3 * 3.9e9, 25.6e6 * 4, 256),
+    # paper LLaMA-8L d384: ~43M params, seq 1024
+    "llama8L": (6 * 43e6 * 1024, 43e6 * 4, 32),
+}
+
+
+def breakdown(flops, grad_bytes, batch, n, peak, bw):
+    compute = batch * flops / peak
+    ring = 2 * (n - 1) / n * grad_bytes / bw
+    optinc = 1.0 * grad_bytes / bw
+    return compute, ring, optinc
+
+
+def main(full: bool = False):
+    for hw, (peak, bw) in (("H100", (GPU_FLOPS, GPU_BW)),
+                           ("v5e", (V5E_FLOPS, V5E_BW))):
+        for name, (flops, gbytes, batch) in MODELS.items():
+            n = 4
+            comp, ring, opt = breakdown(flops, gbytes, batch, n, peak, bw)
+            total_ring = comp + ring
+            total_opt = comp + opt
+            emit(f"fig7b.{hw}.{name}", 0.0,
+                 f"compute_ms={comp * 1e3:.2f} ring_comm_ms={ring * 1e3:.2f} "
+                 f"optinc_comm_ms={opt * 1e3:.2f} "
+                 f"latency_reduction={1 - total_opt / total_ring:.3f}")
+
+
+if __name__ == "__main__":
+    main()

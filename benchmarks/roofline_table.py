@@ -1,0 +1,55 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import json
+
+from repro import configs
+from repro.launch.roofline import PEAK_FLOPS
+
+from .common import RESULTS, emit
+
+
+def model_flops(arch: str, tokens: int) -> float:
+    cfg = configs.get(arch)
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    return 6.0 * n * tokens
+
+
+def main(full: bool = False):
+    rows = sorted((RESULTS / "dryrun").glob("*.json"))
+    for p in rows:
+        rec = json.loads(p.read_text())
+        tag = p.stem
+        if rec.get("skipped"):
+            emit(f"roofline.{tag}", 0.0, f"SKIP({rec['skipped']})")
+            continue
+        r = rec["roofline"]
+        shape = configs.SHAPES[rec["shape"]]
+        if rec["kind"] == "train":
+            tokens = shape["seq_len"] * shape["global_batch"]
+            mf = model_flops(rec["arch"], tokens) / rec["chips"]  # 6ND = fwd+bwd
+        elif rec["kind"] == "prefill":
+            tokens = shape["seq_len"] * shape["global_batch"]
+            mf = model_flops(rec["arch"], tokens) / 3 / rec["chips"]  # 2ND fwd
+        else:
+            tokens = shape["global_batch"]
+            mf = model_flops(rec["arch"], tokens) / 3 / rec["chips"]
+        # XLA cost_analysis counts loop/scan bodies ONCE, so HLO flops is a
+        # lower bound for scanned programs; the analytic 6ND/2ND term is the
+        # reliable compute floor. Report both and bound with their max.
+        compute_eff = max(r["compute_s"], mf / PEAK_FLOPS)
+        useful = min(mf / max(rec["flops_per_device"], 1.0), 1.0)
+        dom = r["dominant"]
+        if compute_eff >= max(r["memory_s"], r["collective_s"]):
+            dom = "compute"
+        bound = max(compute_eff, r["memory_s"], r["collective_s"])
+        frac = (mf / PEAK_FLOPS) / bound if bound else 0.0
+        emit(f"roofline.{tag}", 0.0,
+             f"compute_s={compute_eff:.4f} memory_s={r['memory_s']:.4f} "
+             f"collective_s={r['collective_s']:.4f} dominant={dom} "
+             f"peak_GiB={rec['memory']['peak_bytes'] / 2**30:.2f} "
+             f"useful_flops_ratio={useful:.3f} roofline_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    main()

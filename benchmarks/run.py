@@ -1,0 +1,49 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+
+Prints ``name,us_per_call,derived`` CSV lines. --full enables the long
+variants (subsampled scenario 2-4 training, all fig6 mesh sizes, longer
+fig7a runs).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import fig6, fig7a, fig7b, roofline_table, table1, table2
+
+SECTIONS = {
+    "table1": table1.main,
+    "table2": table2.main,
+    "fig6": fig6.main,
+    "fig7a": fig7a.main,
+    "fig7b": fig7b.main,
+    "roofline": roofline_table.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+    failures = 0
+    for name, fn in SECTIONS.items():
+        if name not in only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn(full=args.full)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table I: ONN structures, area ratios, trained accuracy.
+
+Area ratios are computed exactly from the MZI cost model for all four
+scenarios. ONN accuracy: scenario 1 is fully trained in this container
+(results/scenario1_params.pkl, produced by examples/quickstart.py or the
+background training run); scenarios 2-4 report the area model plus a
+subsampled-training accuracy when --full is given (their full grids are up
+to 13.8M samples — paper trains them on A100s).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import area, dataset, training
+from repro.core.onn import ONNConfig
+
+from .common import emit, load_scenario1
+
+SCENARIOS = [
+    # bits, servers, structure, approx layers, paper area ratio
+    (8, 4, (4, 64, 128, 256, 128, 64, 4), tuple(range(1, 7)), 0.393),
+    (8, 8, (4, 64, 128, 256, 512, 256, 128, 64, 4), tuple(range(2, 8)), 0.409),
+    (8, 16, (4, 64, 128, 256, 512, 1024, 512, 256, 128, 64, 4),
+     tuple(range(2, 10)), 0.404),
+    (16, 4, (4, 64, 128, 256, 512, 256, 128, 64, 8), (4, 5, 6), 0.493),
+]
+
+
+def main(full: bool = False):
+    blob = load_scenario1()
+    for i, (bits, n, structure, approx_layers, paper) in enumerate(SCENARIOS, 1):
+        cfg = ONNConfig(structure=structure, approx_layers=approx_layers,
+                        bits=bits, n_servers=n, k_inputs=4)
+        ratio = area.area_ratio(list(structure), set(approx_layers))
+        acc = ""
+        if i == 1 and blob is not None:
+            a, t = dataset.full_dataset(blob["cfg"])
+            acc = training.accuracy(blob["params"], a, t, blob["cfg"])
+            acc = f"acc={acc:.6f}"
+        elif full:
+            rng = np.random.default_rng(0)
+            a, t = dataset.sampled_dataset(cfg, rng, 100_000)
+            tc = training.TrainConfig(epochs=600, e1=500, lr=8e-3,
+                                      batch_size=8192, proj_every=100)
+            params, _ = training.train(cfg, tc, a, t, eval_every=100)
+            acc = f"acc={training.accuracy(params, a, t, cfg):.6f}(subsampled)"
+        emit(f"table1.scenario{i}.B{bits}.N{n}", 0.0,
+             f"area_ratio={ratio:.3f} paper={paper} "
+             f"dataset={dataset.dataset_size(cfg)} {acc}")
+
+
+if __name__ == "__main__":
+    main()

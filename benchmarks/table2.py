@@ -1,0 +1,27 @@
+"""Paper Table II: matrix-approximation layer sweep for scenario 4 —
+area ratio per selected-layer set + the paper's measured error model
+(reused for error injection in fig7a)."""
+from __future__ import annotations
+
+from repro.core import area, error_model
+
+from .common import emit
+
+ST4 = [4, 64, 128, 256, 512, 256, 128, 64, 8]
+PAPER_ROWS = [((4, 5, 6), 0.493), ((4, 5, 6, 7), 0.479),
+              ((4, 5, 6, 7, 8), 0.474), ((3, 4, 5, 6), 0.437),
+              ((3, 4, 5, 6, 7), 0.422)]
+
+
+def main(full: bool = False):
+    for layers, paper in PAPER_ROWS:
+        ratio = area.area_ratio(ST4, set(layers))
+        spec = error_model.TABLE_II[layers]
+        errs = ",".join(f"{v}:{r:g}" for v, r in zip(spec.values, spec.ratios))
+        emit(f"table2.layers_{'_'.join(map(str, layers))}", 0.0,
+             f"area_ratio={ratio:.3f} paper={paper} "
+             f"onn_acc={spec.accuracy} errors=[{errs}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""One-shot fixup: early sweep records divided per-device stats by chips;
+multiply back and recompute roofline terms (idempotent via raw_stats flag)."""
+import json, pathlib, sys
+sys.path.insert(0, "src")
+from repro.launch import roofline
+
+for p in pathlib.Path("results/dryrun").glob("*.json"):
+    r = json.loads(p.read_text())
+    if r.get("skipped") or r.get("raw_stats"):
+        continue
+    c = r["chips"]
+    r["flops_per_device"] = r["flops_per_device"] * c
+    r["bytes_per_device"] = r["bytes_per_device"] * c
+    for k in ("argument_bytes", "output_bytes", "temp_bytes", "alias_bytes",
+              "peak_bytes"):
+        if r["memory"].get(k) is not None:
+            r["memory"][k] = r["memory"][k] * c
+    r["roofline"] = roofline.roofline_terms(
+        r["flops_per_device"], r["bytes_per_device"],
+        r["collective_wire_bytes"], c)
+    r["raw_stats"] = True
+    p.write_text(json.dumps(r, indent=1))
+print("fixed")

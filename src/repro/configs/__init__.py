@@ -1,0 +1,51 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module defines CONFIG (full assigned config) and SMOKE (reduced
+same-family config for CPU smoke tests) plus SHAPES (the assigned
+input-shape cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "xlstm_125m", "zamba2_7b", "minitron_4b", "llama3_405b",
+    "deepseek_coder_33b", "qwen3_32b", "whisper_tiny", "phi35_moe_42b",
+    "deepseek_v3_671b", "chameleon_34b",
+]
+
+# assigned input shapes (same set for every LM arch)
+SHAPES = {
+    "train_4k": {"kind": "train", "seq_len": 4096, "global_batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq_len": 32768, "global_batch": 32},
+    "decode_32k": {"kind": "decode", "seq_len": 32768, "global_batch": 128},
+    "long_500k": {"kind": "decode", "seq_len": 524288, "global_batch": 1},
+}
+
+
+def get(arch: str):
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke(arch: str):
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.SMOKE
+
+
+def runs_long_context(cfg) -> bool:
+    """long_500k runs only for sub-quadratic (SSM/hybrid) archs."""
+    return cfg.ssm in ("mamba2", "xlstm")
+
+
+def cells(arch: str):
+    """The (shape -> spec) cells this arch runs (skips documented)."""
+    cfg = get(arch)
+    out = {}
+    for name, spec in SHAPES.items():
+        if name == "long_500k" and not runs_long_context(cfg):
+            out[name] = {**spec, "skip": "full-attention arch (quadratic)"}
+        else:
+            out[name] = dict(spec)
+    return out

@@ -1,0 +1,95 @@
+"""Pallas TPU flash-attention kernel (online softmax over KV tiles).
+
+The generic perf-critical layer of the model zoo: prefill attention at 32k
+sequence cannot materialize (sq, skv) scores in HBM. We tile Q into
+(BLK_Q, d) blocks resident in VMEM, stream K/V tiles, and keep the running
+max / normalizer / output accumulator in VMEM scratch — O(sq * d) memory.
+
+Single-head kernel; ops.py vmaps over (batch, heads) and handles GQA
+broadcasting. Causal masking is computed from program ids, and fully-masked
+KV tiles are skipped via the grid (no wasted MXU work past the diagonal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, blk_q: int, blk_k: int,
+                  kv_steps: int, sq: int, skv: int):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: rows attend to kv positions <= row + (skv - sq)
+    @pl.when((ki * blk_k <= qi * blk_q + blk_q - 1 + (skv - sq))
+             if causal else (ki >= 0))
+    def _step():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows + (skv - sq), s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Single-head attention. q: (sq, d), k/v: (skv, d)."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    if scale is None:
+        scale = d ** -0.5
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, skv)
+    assert sq % blk_q == 0 and skv % blk_k == 0
+    kv_steps = skv // blk_k
+    grid = (sq // blk_q, kv_steps)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          blk_q=blk_q, blk_k=blk_k, kv_steps=kv_steps,
+                          sq=sq, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((blk_k, d), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((blk_k, d), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, d), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

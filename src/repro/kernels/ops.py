@@ -1,0 +1,66 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled
+(interpret=False); on CPU (this container) the *model code* uses the pure
+jnp references so dry-runs lower to ordinary HLO, while tests run the
+Pallas kernel bodies in interpret mode against the references.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import pam4 as pam4_k
+from . import onn_layer as onn_k
+from . import attention as attn_k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ------------------------------- pam4 -------------------------------
+
+@partial(jax.jit, static_argnames=("bits",))
+def pam4_quantize_encode(g, scale, bits: int = 8):
+    if _on_tpu():
+        return pam4_k.pam4_quantize_encode(g, scale, bits, interpret=False)
+    return ref.pam4_quantize_encode_ref(g, scale, bits, g.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("bits", "n"))
+def pam4_decode_dequantize(total, scale, bits: int, n: int):
+    if _on_tpu():
+        return pam4_k.pam4_decode_dequantize(total, scale, bits, n,
+                                             interpret=False)
+    u_avg = ref.pam4_qmean_ref(total, n)
+    return ref.pam4_decode_dequantize_ref(u_avg, scale, bits)
+
+
+# ----------------------------- onn layer ----------------------------
+
+@partial(jax.jit, static_argnames=("relu",))
+def onn_layer(x, u, d, b, relu: bool = True):
+    if _on_tpu():
+        return onn_k.onn_layer(x, u, d, b, relu=relu, interpret=False)
+    return ref.onn_layer_ref(x, u, d, b, relu=relu)
+
+
+# ---------------------------- attention -----------------------------
+
+@partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    """Multi-head GQA attention. q: (b, hq, sq, d), k/v: (b, hkv, skv, d)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    if _on_tpu():
+        f = partial(attn_k.flash_attention, causal=causal, interpret=False)
+    else:
+        f = partial(ref.mha_ref, causal=causal)
+    return jax.vmap(jax.vmap(f))(q, k, v)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------- pam4 -------------------------------
+
+def pam4_quantize_encode_ref(g: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                             block: int) -> jnp.ndarray:
+    """Block-quantize fp32 gradients to offset-binary B-bit ints (what the
+    transceivers put on the fiber). g: (nblocks, block), scale: (nblocks,).
+    Returns int32 (nblocks, block) in [0, 2^B - 2]."""
+    levels = 2 ** (bits - 1) - 1
+    q = jnp.round(g.astype(jnp.float32) / scale[:, None] * levels)
+    q = jnp.clip(q, -levels, levels).astype(jnp.int32)
+    return q + levels
+
+
+def pam4_decode_dequantize_ref(u_avg: jnp.ndarray, scale: jnp.ndarray,
+                               bits: int) -> jnp.ndarray:
+    """Averaged offset-binary ints -> fp32 gradients. u_avg: (nblocks, block)."""
+    levels = 2 ** (bits - 1) - 1
+    return (u_avg.astype(jnp.float32) - levels) * (scale[:, None] / levels)
+
+
+def pam4_qmean_ref(total: jnp.ndarray, n: int) -> jnp.ndarray:
+    """The ONN behavioural transfer function on the integer sum (eq. 3)."""
+    return jnp.round(total.astype(jnp.float32) / n).astype(jnp.int32)
+
+
+# ----------------------------- onn layer ----------------------------
+
+def onn_layer_ref(x: jnp.ndarray, u: jnp.ndarray, d: jnp.ndarray,
+                  b: jnp.ndarray, relu: bool = True) -> jnp.ndarray:
+    """Fused approximated ONN layer: y = act(d * (x @ u^T) + b).
+
+    x: (batch, n), u: (m, n) orthogonal, d: (m,), b: (m,)."""
+    y = x @ u.T * d + b
+    return jax.nn.relu(y) if relu else y
+
+
+# ---------------------------- attention -----------------------------
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q: (sq, d), k/v: (skv, d). Single head."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        sq, skv = s.shape
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

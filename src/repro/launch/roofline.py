@@ -1,0 +1,98 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * n_links * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (whole-program,
+all chips -> divide by chip count). collective_bytes is parsed from the
+compiled HLO text: we sum the result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, bucketed by
+replica-group size so cross-pod traffic is visible separately.
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+N_LINKS = 4                  # links usable concurrently per chip (2D torus)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-kind, per-group-size result bytes (whole program, per device)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes = m.group(1) or m.group(2)
+        kind = m.group(3)
+        nbytes = _shape_bytes(shapes)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUPS_V2_RE.search(line)
+            gsize = int(gm2.group(2)) if gm2 else 0
+        key = f"{kind}/g{gsize}"
+        rec = out.setdefault(key, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def collective_wire_bytes(colls: dict) -> int:
+    """Approximate per-device wire bytes: result-shape bytes scaled by the
+    ring-algorithm factor (N-1)/N per op kind."""
+    total = 0
+    for key, rec in colls.items():
+        kind, g = key.split("/g")
+        g = max(int(g), 1)
+        factor = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            factor *= 2.0        # reduce-scatter + all-gather
+        total += rec["bytes"] * factor
+    return int(total)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, chips: int) -> dict:
+    """cost_analysis numbers are whole-program per-device already (SPMD)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / (N_LINKS * LINK_BW)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}

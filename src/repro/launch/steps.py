@@ -1,0 +1,209 @@
+"""shard_map step builders: train / prefill / decode.
+
+This is where the paper's technique becomes a first-class runtime feature:
+``make_train_step(..., sync)`` selects how the data-parallel gradient
+synchronization is executed — XLA psum, a faithful ring all-reduce, or the
+OptINC quantize->integer-reduce->Q(mean) collective (core.collective).
+
+With FSDP, gradients of weight-sharded parameters are already
+reduce-scattered over 'data' by the all-gather transpose; the remaining
+explicit sync (and OptINC's target) is the cross-pod axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.collective import SyncConfig, sync_gradients
+from ..models import lm
+from ..models.config import ModelConfig
+from ..models.layers import ShardCtx
+from ..optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+
+
+def make_ctx(mesh, fsdp: bool = False, seq_shard_cache: bool = False,
+             seq_parallel: bool = False, remat_groups: int = 0) -> ShardCtx:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardCtx(tp=sizes.get("model", 1), dp=sizes.get("data", 1),
+                    pods=sizes.get("pod", 1), fsdp=fsdp,
+                    seq_shard_cache=seq_shard_cache,
+                    seq_parallel=seq_parallel, remat_groups=remat_groups)
+
+
+def batch_specs(ctx: ShardCtx, cfg: ModelConfig, batch_shardable: bool = True):
+    dp = ctx.dp_axes if batch_shardable else None
+    spec = {"tokens": P(dp, None)}
+    if cfg.enc_dec:
+        spec["enc_frames"] = P(dp, None, None)
+    return spec
+
+
+def _fsdp_leaf_tree(specs, ctx: ShardCtx):
+    """True for every param leaf whose spec includes the data axis (its
+    gradient is already reduce-scattered over 'data' by AD)."""
+    def has_data(spec):
+        return ctx.data_axis in [a for a in spec if a is not None]
+    return jax.tree.map(has_data, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, residual):
+    """Sync replicated-leaf grads over the full DP axes; FSDP-sharded leaf
+    grads only over the pod axis (and rescale the AD sum to a mean)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    masks = jax.tree.leaves(fsdp_mask)
+    res_leaves = (jax.tree.leaves(residual) if residual is not None
+                  else [None] * len(leaves))
+    rep_axes = ctx.dp_axes
+    pod_axes = (ctx.pod_axis,) if ctx.pods > 1 else ()
+    out, new_res = [], []
+    rep_idx = [i for i, m in enumerate(masks) if not m]
+    # replicated leaves: the full OptINC/ring/psum sync
+    rep_tree = [leaves[i] for i in rep_idx]
+    rep_res = [res_leaves[i] for i in rep_idx]
+    rep_res = rep_res if residual is not None else None
+    synced_rep, res_rep = sync_gradients(
+        rep_tree, dataclasses.replace(sync, axes=rep_axes), key, rep_res)
+    # fsdp leaves: AD already summed over 'data' -> mean; sync pods
+    it = iter(synced_rep)
+    it_res = iter(res_rep) if res_rep is not None else None
+    for i, (g, m) in enumerate(zip(leaves, masks)):
+        if not m:
+            out.append(next(it))
+            new_res.append(next(it_res) if it_res is not None else None)
+            continue
+        g = g / ctx.dp
+        if pod_axes:
+            g_s, r_s = sync_gradients(
+                [g], dataclasses.replace(sync, axes=pod_axes), key, None)
+            g = g_s[0]
+        out.append(g)
+        new_res.append(jnp.zeros((1,), jnp.float32) if residual is not None
+                       else None)
+    grads = jax.tree.unflatten(treedef, out)
+    res = (jax.tree.unflatten(treedef, new_res)
+           if residual is not None else None)
+    return grads, res
+
+
+def make_train_step(cfg: ModelConfig, mesh, sync: SyncConfig,
+                    opt: AdamWConfig, fsdp: bool = False,
+                    error_feedback: bool = False,
+                    seq_parallel: bool = False, remat_groups: int = 0):
+    """Returns (step_fn, in_specs, out_specs). step_fn is shard_map'd but
+    NOT jit'd (callers jit / lower it)."""
+    assert not (seq_parallel and cfg.enc_dec), "SP not wired for enc-dec"
+    ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                   remat_groups=remat_groups)
+    specs = lm.flat_specs(cfg, ctx)
+    fsdp_mask = _fsdp_leaf_tree(specs, ctx)
+    bspec = batch_specs(ctx, cfg)
+
+    def step(params, opt_state, batch, key):
+        def lf(p):
+            return lm.loss_fn(cfg, ctx, p, batch)
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, _ = _split_sync(grads, fsdp_mask, ctx, sync, key, None)
+        grads, gnorm = clip_by_global_norm(
+            grads, opt.clip_norm, axis_names=(ctx.model_axis,))
+        params, opt_state = adamw_update(opt, params, grads, opt_state)
+        metrics = {"loss": lax.pmean(loss, ctx.dp_axes),
+                   "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    in_specs = (specs, opt_specs(specs), bspec, P())
+    out_specs = (specs, opt_specs(specs), {"loss": P(), "grad_norm": P()})
+    fn = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn, in_specs, out_specs
+
+
+def opt_specs(param_specs_tree):
+    return {"m": param_specs_tree, "v": param_specs_tree, "step": P()}
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, fsdp: bool = False,
+                      seq_parallel: bool = False, remat_groups: int = 0):
+    assert not (seq_parallel and cfg.enc_dec), "SP not wired for enc-dec"
+    ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                   remat_groups=remat_groups)
+    specs = lm.flat_specs(cfg, ctx)
+    bspec = batch_specs(ctx, cfg)
+
+    def step(params, batch):
+        return lm.prefill_step(cfg, ctx, params, batch["tokens"],
+                               batch.get("enc_frames"))
+
+    cache_spec = cache_specs(cfg, ctx)
+    out_specs = (P(ctx.dp_axes, "model"), cache_spec)
+    fn = jax.shard_map(step, mesh=mesh, in_specs=(specs, bspec),
+                       out_specs=out_specs, check_vma=False)
+    return fn, (specs, bspec), out_specs
+
+
+def make_decode_step(cfg: ModelConfig, mesh, fsdp: bool = False,
+                     seq_shard_cache: bool = False,
+                     batch_shardable: bool = True):
+    ctx = make_ctx(mesh, fsdp=fsdp, seq_shard_cache=seq_shard_cache)
+    specs = lm.flat_specs(cfg, ctx)
+    dp = ctx.dp_axes if batch_shardable else None
+
+    def step(params, cache, token, pos):
+        return lm.decode_step(cfg, ctx, params, cache, token, pos)
+
+    cache_spec = cache_specs(cfg, ctx, batch_shardable=batch_shardable)
+    in_specs = (specs, cache_spec, P(dp, None), P())
+    out_specs = (P(dp, "model"), cache_spec)
+    fn = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn, in_specs, out_specs
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardCtx, batch_shardable: bool = True):
+    """PartitionSpec tree matching lm.init_cache's structure: batch over the
+    DP axes (when shardable), heads over 'model', optionally cache sequence
+    over 'data' (flash-decode sequence sharding)."""
+    dp = ctx.dp_axes if batch_shardable else None
+    seq_ax = ctx.data_axis if ctx.seq_shard_cache else None
+
+    def kv():
+        return {"k": P(None, dp, ctx.model_axis, seq_ax, None),
+                "v": P(None, dp, ctx.model_axis, seq_ax, None)}
+
+    if cfg.ssm == "mamba2":
+        out = {"mamba": {
+            "ssm": P(None, dp, ctx.model_axis, None, None),
+            "conv_x": P(None, dp, None, ctx.model_axis),
+            "conv_bc": P(None, dp, None, None)}}
+        if cfg.attn_every:
+            out["attn"] = kv()
+        return out
+    if cfg.ssm == "xlstm":
+        st = P(None, dp, ctx.model_axis, None)
+        out = {"mlstm": {"c": P(None, dp, ctx.model_axis, None, None),
+                         "n": st}}
+        if cfg.slstm_every:
+            out["slstm"] = {"h": st, "c": st, "n": st, "m": st}
+        return out
+    if cfg.enc_dec:
+        return {"self": kv(), "cross": kv()}
+    if cfg.moe and cfg.mla:
+        def mla():
+            return {"ckv": P(None, dp, seq_ax, None),
+                    "scale": P(None, dp, seq_ax, None),
+                    "krope": P(None, dp, seq_ax, None)}
+        out = {"moe": mla()}
+        if cfg.first_dense_layers:
+            out["dense"] = mla()
+        return out
+    if cfg.moe:
+        out = {"moe": kv()}
+        if cfg.first_dense_layers:
+            out["dense"] = kv()
+        return out
+    return {"layers": kv()}

@@ -1,0 +1,903 @@
+"""Model assembly: parameter specs/init, forward pass, and the train /
+prefill / decode step functions, all shard_map-native.
+
+Parameters are dicts of stacked arrays with a leading layer axis, scanned
+with lax.scan + jax.checkpoint so the HLO (and compile time) is O(1) in
+depth. Every leaf has a PartitionSpec in ``param_specs`` — the same tree
+drives shard_map in_specs, checkpoint manifests, and the dry-run.
+
+Sharding convention (axes: pod, data, model):
+  column-parallel weights  (d, f)  -> P(None, fsdp?, 'model')
+  row-parallel weights     (f, d)  -> P(None, 'model', fsdp?)
+  embeddings / lm head              -> vocab over 'model', d over fsdp?
+  small norms / biases              -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from . import blocks
+from .config import ModelConfig
+from .layers import (ShardCtx, embed_lookup, gather_fsdp, lm_loss, rmsnorm,
+                     sp_gather)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDims:
+    """All padded / per-shard dimensions derived from (cfg, ctx)."""
+    h_pad: int      # query heads padded to multiple of tp
+    kv_pad: int     # kv heads padded/replicated to multiple of tp
+    v_pad: int      # vocab padded to multiple of tp
+    ff_pad: int
+    d_model: int
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, ctx: ShardCtx):
+        return cls(
+            h_pad=pad_to(cfg.n_heads, ctx.tp),
+            kv_pad=max(cfg.n_kv_heads, ctx.tp) if cfg.n_kv_heads < ctx.tp
+            else pad_to(cfg.n_kv_heads, ctx.tp),
+            v_pad=pad_to(cfg.vocab, ctx.tp),
+            ff_pad=pad_to(max(cfg.d_ff, 1), ctx.tp),
+            d_model=cfg.d_model,
+        )
+
+
+# ====================== parameter specs and init ======================
+
+def _fsdp(ctx):  # helper: the axis name used for FSDP or None
+    return ctx.data_axis if ctx.fsdp else None
+
+
+def attn_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    hd = cfg.hd
+    spec = {
+        "norm": P(None, None),
+        "wq": P(None, fa, ctx.model_axis),
+        "wk": P(None, fa, ctx.model_axis),
+        "wv": P(None, fa, ctx.model_axis),
+        "wo": P(None, ctx.model_axis, fa),
+    }
+    shapes = {
+        "norm": (cfg.d_model,),
+        "wq": (cfg.d_model, dims.h_pad * hd),
+        "wk": (cfg.d_model, dims.kv_pad * hd),
+        "wv": (cfg.d_model, dims.kv_pad * hd),
+        "wo": (dims.h_pad * hd, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P(None, None)
+        spec["k_norm"] = P(None, None)
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    return spec, shapes
+
+
+def mla_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    hd, rd = cfg.hd, cfg.qk_rope_dim
+    spec = {
+        "norm": P(None, None),
+        "wq_a": P(None, fa, None),
+        "q_norm": P(None, None),
+        "wq_b": P(None, None, ctx.model_axis),
+        "wkv_a": P(None, fa, None),
+        "kv_norm": P(None, None),
+        "wkv_b": P(None, None, ctx.model_axis),
+        "wo": P(None, ctx.model_axis, fa),
+    }
+    shapes = {
+        "norm": (cfg.d_model,),
+        "wq_a": (cfg.d_model, cfg.q_lora_rank),
+        "q_norm": (cfg.q_lora_rank,),
+        "wq_b": (cfg.q_lora_rank, dims.h_pad * (hd + rd)),
+        "wkv_a": (cfg.d_model, cfg.kv_lora_rank + rd),
+        "kv_norm": (cfg.kv_lora_rank,),
+        "wkv_b": (cfg.kv_lora_rank, dims.h_pad * 2 * hd),
+        "wo": (dims.h_pad * hd, cfg.d_model),
+    }
+    return spec, shapes
+
+
+def mlp_param_specs(cfg, ctx, dims, ff=None):
+    fa = _fsdp(ctx)
+    ff = ff or dims.ff_pad
+    spec = {
+        "mlp_norm": P(None, None),
+        "w_gate": P(None, fa, ctx.model_axis),
+        "w_up": P(None, fa, ctx.model_axis),
+        "w_down": P(None, ctx.model_axis, fa),
+    }
+    shapes = {
+        "mlp_norm": (cfg.d_model,),
+        "w_gate": (cfg.d_model, ff),
+        "w_up": (cfg.d_model, ff),
+        "w_down": (ff, cfg.d_model),
+    }
+    return spec, shapes
+
+
+def moe_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    ffe = cfg.moe_d_ff
+    spec = {
+        "norm": P(None, None),
+        "router": P(None, None, ctx.model_axis),
+        "w_gate": P(None, ctx.model_axis, fa, None),
+        "w_up": P(None, ctx.model_axis, fa, None),
+        "w_down": P(None, ctx.model_axis, None, fa),
+    }
+    shapes = {
+        "norm": (cfg.d_model,),
+        "router": (cfg.d_model, cfg.n_experts),
+        "w_gate": (cfg.n_experts, cfg.d_model, ffe),
+        "w_up": (cfg.n_experts, cfg.d_model, ffe),
+        "w_down": (cfg.n_experts, ffe, cfg.d_model),
+    }
+    if cfg.n_shared_experts:
+        sh = pad_to(cfg.n_shared_experts * ffe, ctx.tp)
+        spec.update({"sh_gate": P(None, fa, ctx.model_axis),
+                     "sh_up": P(None, fa, ctx.model_axis),
+                     "sh_down": P(None, ctx.model_axis, fa)})
+        shapes.update({"sh_gate": (cfg.d_model, sh),
+                       "sh_up": (cfg.d_model, sh),
+                       "sh_down": (sh, cfg.d_model)})
+    return spec, shapes
+
+
+def mamba_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    d = cfg.d_model
+    di = 2 * d
+    hp = 64
+    nh = di // hp
+    n = cfg.ssm_state
+    spec = {
+        "norm": P(None, None),
+        "w_x": P(None, fa, ctx.model_axis),
+        "w_z": P(None, fa, ctx.model_axis),
+        "w_bc": P(None, fa, None),
+        "w_dt": P(None, None, ctx.model_axis),
+        "conv_x": P(None, None, ctx.model_axis),
+        "conv_bc": P(None, None, None),
+        "dt_bias": P(None, ctx.model_axis),
+        "a_log": P(None, ctx.model_axis),
+        "d_skip": P(None, ctx.model_axis),
+        "w_out": P(None, ctx.model_axis, fa),
+    }
+    shapes = {
+        "norm": (d,), "w_x": (d, di), "w_z": (d, di), "w_bc": (d, 2 * n),
+        "w_dt": (d, nh), "conv_x": (4, di), "conv_bc": (4, 2 * n),
+        "dt_bias": (nh,), "a_log": (nh,), "d_skip": (nh,),
+        "w_out": (di, d),
+    }
+    return spec, shapes
+
+
+def mlstm_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    d = cfg.d_model
+    di = 2 * d
+    nh = dims.h_pad
+    spec = {
+        "norm": P(None, None),
+        "w_q": P(None, fa, ctx.model_axis),
+        "w_k": P(None, fa, ctx.model_axis),
+        "w_v": P(None, fa, ctx.model_axis),
+        "w_z": P(None, fa, ctx.model_axis),
+        "w_if": P(None, None, ctx.model_axis),
+        "w_out": P(None, ctx.model_axis, fa),
+    }
+    shapes = {
+        "norm": (d,), "w_q": (d, di), "w_k": (d, di), "w_v": (d, di),
+        "w_z": (d, di), "w_if": (d, 2 * nh), "w_out": (di, d),
+    }
+    return spec, shapes
+
+
+def slstm_param_specs(cfg, ctx, dims):
+    fa = _fsdp(ctx)
+    d = cfg.d_model
+    di = d
+    nh = dims.h_pad
+    hp = di // nh
+    spec = {
+        "norm": P(None, None),
+        "w_in": P(None, fa, ctx.model_axis),
+        "r": P(None, ctx.model_axis, None, None),
+        "w_out": P(None, ctx.model_axis, fa),
+    }
+    shapes = {"norm": (d,), "w_in": (d, 4 * di), "r": (nh, hp, hp),
+              "w_out": (di, d)}
+    return spec, shapes
+
+
+def _stacked(n_layers, spec, shapes):
+    return ({k: v for k, v in spec.items()},
+            {k: (n_layers,) + s for k, s in shapes.items()})
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardCtx):
+    """Returns (specs, shapes): flat dict trees keyed by component."""
+    dims = ArchDims.build(cfg, ctx)
+    fa = _fsdp(ctx)
+    specs = {"embed": P(ctx.model_axis, fa),
+             "final_norm": P(None),
+             "lm_head": P(fa, ctx.model_axis)}
+    shapes = {"embed": (dims.v_pad, cfg.d_model),
+              "final_norm": (cfg.d_model,),
+              "lm_head": (cfg.d_model, dims.v_pad)}
+
+    def add(prefix, n, builder, **kw):
+        sp, sh = builder(cfg, ctx, dims, **kw)
+        sp, sh = _stacked(n, sp, sh)
+        specs[prefix] = sp
+        shapes[prefix] = sh
+
+    if cfg.ssm == "mamba2":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm = cfg.n_layers - n_attn
+        add("mamba", n_ssm, mamba_param_specs)
+        if n_attn:  # shared attention block (zamba2): NOT stacked, so the
+            # builders' leading layer-axis spec entry is stripped
+            asp, ash = attn_param_specs(cfg, ctx, dims)
+            msp, msh = mlp_param_specs(cfg, ctx, dims)
+            specs["shared_attn"] = {k: P(*tuple(v)[1:])
+                                    for k, v in {**asp, **msp}.items()}
+            shapes["shared_attn"] = {**ash, **msh}
+    elif cfg.ssm == "xlstm":
+        n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        add("mlstm", n_m, mlstm_param_specs)
+        if n_s:
+            add("slstm", n_s, slstm_param_specs)
+    elif cfg.enc_dec:
+        esp, esh = attn_param_specs(cfg, ctx, dims)
+        emsp, emsh = mlp_param_specs(cfg, ctx, dims)
+        specs["encoder"] = _stacked(cfg.n_enc_layers, {**esp, **emsp},
+                                    {**esh, **emsh})[0]
+        shapes["encoder"] = _stacked(cfg.n_enc_layers, {**esp, **emsp},
+                                     {**esh, **emsh})[1]
+        dsp, dsh = attn_param_specs(cfg, ctx, dims)
+        xsp, xsh = attn_param_specs(cfg, ctx, dims)
+        dmsp, dmsh = mlp_param_specs(cfg, ctx, dims)
+        dec_sp = {**dsp, **{f"x_{k}": v for k, v in xsp.items()}, **dmsp}
+        dec_sh = {**dsh, **{f"x_{k}": v for k, v in xsh.items()}, **dmsh}
+        specs["decoder"] = _stacked(cfg.n_layers, dec_sp, dec_sh)[0]
+        shapes["decoder"] = _stacked(cfg.n_layers, dec_sp, dec_sh)[1]
+    elif cfg.moe:
+        attn_builder = mla_param_specs if cfg.mla else attn_param_specs
+        nd = cfg.first_dense_layers
+        nm = cfg.n_layers - nd
+        asp, ash = attn_builder(cfg, ctx, dims)
+        msp, msh = moe_param_specs(cfg, ctx, dims)
+        specs["moe_layers"] = _stacked(nm, {**asp, **msp}, {**ash, **msh})[0]
+        shapes["moe_layers"] = _stacked(nm, {**asp, **msp}, {**ash, **msh})[1]
+        if nd:
+            dsp, dsh = attn_builder(cfg, ctx, dims)
+            mlsp, mlsh = mlp_param_specs(cfg, ctx, dims)
+            specs["dense_layers"] = _stacked(nd, {**dsp, **mlsp},
+                                             {**dsh, **mlsh})[0]
+            shapes["dense_layers"] = _stacked(nd, {**dsp, **mlsp},
+                                              {**dsh, **mlsh})[1]
+        if cfg.mtp:  # multi-token-prediction block (training only)
+            tsp, tsh = attn_builder(cfg, ctx, dims)
+            tmsp, tmsh = mlp_param_specs(cfg, ctx, dims)
+            specs["mtp"] = _stacked(1, {**tsp, **tmsp}, {**tsh, **tmsh})[0]
+            shapes["mtp"] = _stacked(1, {**tsp, **tmsp}, {**tsh, **tmsh})[1]
+    else:  # dense transformer
+        asp, ash = attn_param_specs(cfg, ctx, dims)
+        msp, msh = mlp_param_specs(cfg, ctx, dims)
+        specs["layers"] = _stacked(cfg.n_layers, {**asp, **msp},
+                                   {**ash, **msh})[0]
+        shapes["layers"] = _stacked(cfg.n_layers, {**asp, **msp},
+                                    {**ash, **msh})[1]
+    return specs, shapes
+
+
+def param_shape_dtype(cfg: ModelConfig, ctx: ShardCtx):
+    """ShapeDtypeStruct tree for the dry-run (no allocation)."""
+    _, shapes = param_specs(cfg, ctx)
+    dt = _dt(cfg)
+
+    def to_sds(tree):
+        if isinstance(tree, dict):
+            return {k: to_sds(v) for k, v in tree.items()}
+        return jax.ShapeDtypeStruct(tree, dt)
+    return to_sds(shapes)
+
+
+def flat_specs(cfg: ModelConfig, ctx: ShardCtx):
+    specs, _ = param_specs(cfg, ctx)
+    return specs
+
+
+def init_params(cfg: ModelConfig, ctx: ShardCtx, key):
+    """Materialize (global) parameters — smoke tests / real runs only."""
+    _, shapes = param_specs(cfg, ctx)
+    dt = _dt(cfg)
+    leaves, treedef = jax.tree.flatten(shapes,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, shp in zip(keys, leaves):
+        fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+        if len(shp) == 1 or shp[-1] == 1:
+            out.append(jnp.ones(shp, dt))
+        else:
+            out.append((jax.random.normal(k, shp, jnp.float32)
+                        * (0.02 if fan_in > 8 else 0.5)).astype(dt))
+    params = jax.tree.unflatten(treedef, out)
+    return _fix_special_inits(cfg, params)
+
+
+def _fix_special_inits(cfg, params):
+    """Norms -> 1, ssm dt_bias/a_log sensible ranges, zero-pad the padded
+    query heads' wq/wo so they contribute nothing."""
+    def fix(prefix, p):
+        upd = dict(p)
+        for k in p:
+            if k.endswith("norm") or k in ("final_norm",):
+                upd[k] = jnp.ones_like(p[k])
+        if "a_log" in p:
+            upd["a_log"] = jnp.zeros_like(p["a_log"])       # A = -1
+            upd["dt_bias"] = jnp.full_like(p["dt_bias"], 0.5)
+            upd["d_skip"] = jnp.ones_like(p["d_skip"])
+        return upd
+
+    out = {}
+    for key, val in params.items():
+        if isinstance(val, dict):
+            out[key] = fix(key, val)
+        else:
+            out[key] = jnp.ones_like(val) if key == "final_norm" else val
+    return out
+
+
+# ============================== forward ==============================
+
+def scan_layers(body, carry, stacked, ctx: ShardCtx, remat: bool = True):
+    """lax.scan over stacked layer params with optional two-level
+    (grouped) remat: the outer scan checkpoints group boundaries, the inner
+    scan checkpoints layer boundaries, so live residuals drop from O(L) to
+    O(G + L/G) (§Perf hillclimb: memory term)."""
+    b = jax.checkpoint(body) if remat else body
+    leaves = jax.tree.leaves(stacked)
+    n = leaves[0].shape[0]
+    g = ctx.remat_groups
+    if remat and g > 1 and n % g == 0 and n // g > 1:
+        grouped = jax.tree.map(
+            lambda a: a.reshape(g, n // g, *a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def group(carry, p):
+            carry, _ = lax.scan(b, carry, p)
+            return carry, None
+
+        carry, _ = lax.scan(group, carry, grouped)
+        return carry, None
+    return lax.scan(b, carry, stacked)
+
+def _attn_mlp_layer(ctx, cfg, p, x, pos, cache=None, cache_pos=None,
+                    kv_ext=None, causal=True, prefix=""):
+    """One pre-norm transformer layer (attention + SwiGLU MLP)."""
+    attn_p = {k[len(prefix):]: v for k, v in p.items()} if prefix else p
+    a, new_cache = blocks.gqa_attention(ctx, cfg, attn_p, x, pos, cache,
+                                        cache_pos, kv_ext, causal)
+    x = x + a
+    h = rmsnorm(x, p["mlp_norm"])
+    x = x + blocks.swiglu_mlp(ctx, h, p["w_gate"], p["w_up"], p["w_down"])
+    return x, new_cache
+
+
+def _mla_moe_layer(ctx, cfg, p, x, pos, cache=None, cache_pos=None,
+                   dense_mlp=False):
+    if cfg.mla:
+        a, new_cache = blocks.mla_attention(ctx, cfg, p, x, pos, cache,
+                                            cache_pos)
+    else:
+        a, new_cache = blocks.gqa_attention(ctx, cfg, p, x, pos, cache,
+                                            cache_pos)
+    x = x + a
+    if dense_mlp:
+        h = rmsnorm(x, p["mlp_norm"])
+        x = x + blocks.swiglu_mlp(ctx, h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, new_cache, 0.0
+    y, aux = blocks.moe_block(ctx, cfg, p, x)
+    return x + y, new_cache, aux
+
+
+def forward_lm(cfg: ModelConfig, ctx: ShardCtx, params, tokens,
+               enc_frames=None, remat: bool = True):
+    """Training/prefill forward. tokens: (b, t) local batch shard.
+    Returns (hidden, aux_loss)."""
+    b, t = tokens.shape
+    pos = jnp.arange(t)
+    emb = gather_fsdp(ctx, params["embed"], 1)
+    x = embed_lookup(ctx, emb, tokens, cfg.vocab)
+    aux_total = 0.0
+
+    def ckpt(f):
+        return jax.checkpoint(f) if remat else f
+
+    if cfg.ssm == "mamba2":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm = params["mamba"]["norm"].shape[0]
+
+        @ckpt
+        def mamba_body(x, p):
+            y, _ = blocks.mamba2_block(ctx, cfg, p, x)
+            return x + y, None
+
+        if n_attn:
+            per = n_ssm // n_attn
+            grouped = n_attn * per
+            gp = jax.tree.map(
+                lambda a: a[:grouped].reshape(n_attn, per, *a.shape[1:]),
+                params["mamba"])
+            shared = params["shared_attn"]
+
+            @ckpt
+            def group_body(x, p):
+                x, _ = lax.scan(mamba_body, x, p)
+                x, _ = _attn_mlp_layer(ctx, cfg, shared, x, pos)
+                return x, None
+
+            x, _ = lax.scan(group_body, x, gp)
+            tail = jax.tree.map(lambda a: a[grouped:], params["mamba"])
+            if n_ssm - grouped:
+                x, _ = lax.scan(mamba_body, x, tail)
+        else:
+            x, _ = lax.scan(mamba_body, x, params["mamba"])
+    elif cfg.ssm == "xlstm":
+        n_s = params.get("slstm", {"norm": jnp.zeros((0,))})["norm"].shape[0]
+        n_m = params["mlstm"]["norm"].shape[0]
+
+        @ckpt
+        def mlstm_body(x, p):
+            y, _ = blocks.mlstm_block(ctx, cfg, p, x)
+            return x + y, None
+
+        if n_s:
+            per = n_m // n_s
+            gp = jax.tree.map(
+                lambda a: a[:n_s * per].reshape(n_s, per, *a.shape[1:]),
+                params["mlstm"])
+
+            @ckpt
+            def group_body(x, ps):
+                pm, psl = ps
+                x, _ = lax.scan(mlstm_body, x, pm)
+                y, _ = blocks.slstm_block(ctx, cfg, psl, x)
+                return x + y, None
+
+            x, _ = lax.scan(group_body, x, (gp, params["slstm"]))
+            tail = jax.tree.map(lambda a: a[n_s * per:], params["mlstm"])
+            if n_m - n_s * per:
+                x, _ = lax.scan(mlstm_body, x, tail)
+        else:
+            x, _ = lax.scan(mlstm_body, x, params["mlstm"])
+    elif cfg.enc_dec:
+        assert enc_frames is not None
+        e = enc_frames.astype(x.dtype)
+        epos = jnp.arange(e.shape[1])
+
+        @ckpt
+        def enc_body(e, p):
+            e, _ = _attn_mlp_layer(ctx, cfg, p, e, epos, causal=False)
+            return e, None
+
+        e, _ = lax.scan(enc_body, e, params["encoder"])
+
+        @ckpt
+        def dec_body(x, p):
+            x, _ = _attn_mlp_layer(ctx, cfg, p, x, pos)
+            xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+            hl = xp["wq"].shape[-1] // cfg.hd
+            kvl = xp["wk"].shape[-1] // cfg.hd
+            be, te = e.shape[0], e.shape[1]
+            k = (e @ xp["wk"]).reshape(be, te, kvl, cfg.hd).transpose(0, 2, 1, 3)
+            v = (e @ xp["wv"]).reshape(be, te, kvl, cfg.hd).transpose(0, 2, 1, 3)
+            a, _ = blocks.gqa_attention(ctx, cfg, xp, x, None,
+                                        kv_ext=(k, v), causal=False)
+            return x + a, None
+
+        x, _ = lax.scan(dec_body, x, params["decoder"])
+    elif cfg.moe:
+        if cfg.first_dense_layers:
+            @ckpt
+            def dense_body(x, p):
+                x, _, _ = _mla_moe_layer(ctx, cfg, p, x, pos, dense_mlp=True)
+                return x, None
+            x, _ = lax.scan(dense_body, x, params["dense_layers"])
+
+        def moe_body(carry, p):
+            x, aux = carry
+            x, _, a = _mla_moe_layer(ctx, cfg, p, x, pos)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = scan_layers(moe_body, (x, 0.0),
+                                        params["moe_layers"], ctx, remat)
+    else:
+        def body(x, p):
+            x, _ = _attn_mlp_layer(ctx, cfg, p, x, pos)
+            return x, None
+
+        x, _ = scan_layers(body, x, params["layers"], ctx, remat)
+    return x, aux_total
+
+
+def loss_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch,
+            remat: bool = True):
+    """Next-token NLL (+ MoE aux + optional MTP loss)."""
+    tokens = batch["tokens"]
+    enc = batch.get("enc_frames")
+    tin = tokens[:, :-1]
+    t_real = tin.shape[1]
+    if ctx.seq_parallel:   # SP shards the seq dim: pad to a tp multiple
+        pad = (-t_real) % ctx.tp
+        if pad:
+            tin = jnp.pad(tin, ((0, 0), (0, pad)))
+    x, aux = forward_lm(cfg, ctx, params, tin, enc, remat)
+    x = sp_gather(ctx, x)   # back to full sequence for the vocab-sharded loss
+    x = x[:, :t_real]
+    h = rmsnorm(x, params["final_norm"])
+    head = gather_fsdp(ctx, params["lm_head"], 0)
+    loss = lm_loss(ctx, h, head, tokens[:, 1:])
+    if cfg.mtp:
+        pos = jnp.arange(x.shape[1])
+        p1 = jax.tree.map(lambda a: a[0], params["mtp"])
+        # x is already gathered to full sequence here — run the MTP block
+        # with SP disabled so it does not re-gather
+        ctx_mtp = dataclasses.replace(ctx, seq_parallel=False)
+        x2, _, _ = _mla_moe_layer(ctx_mtp, cfg, p1, x, pos, dense_mlp=True)
+        h2 = rmsnorm(x2[:, :-1], params["final_norm"])
+        loss = loss + 0.3 * lm_loss(ctx, h2, head, tokens[:, 2:])
+    return loss + 0.01 * aux, {"nll": loss}
+
+
+# =========================== serving paths ===========================
+
+def init_cache(cfg: ModelConfig, ctx: ShardCtx, batch_local: int,
+               max_seq: int):
+    """Allocate the decode cache (local shards). Layout depends on family."""
+    dims = ArchDims.build(cfg, ctx)
+    dt = _dt(cfg)
+    kvl = dims.kv_pad // ctx.tp
+    hl = dims.h_pad // ctx.tp
+    s_local = max_seq // ctx.dp if ctx.seq_shard_cache else max_seq
+    b = batch_local
+
+    def kv(n):
+        return {"k": jnp.zeros((n, b, kvl, s_local, cfg.hd), dt),
+                "v": jnp.zeros((n, b, kvl, s_local, cfg.hd), dt)}
+
+    if cfg.ssm == "mamba2":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm = cfg.n_layers - n_attn
+        di_l = 2 * cfg.d_model // ctx.tp
+        nh_l = di_l // 64
+        cache = {"mamba": {
+            "ssm": jnp.zeros((n_ssm, b, nh_l, 64, cfg.ssm_state), jnp.float32),
+            "conv_x": jnp.zeros((n_ssm, b, 3, di_l), jnp.float32),
+            "conv_bc": jnp.zeros((n_ssm, b, 3, 2 * cfg.ssm_state), jnp.float32),
+        }}
+        if n_attn:
+            cache["attn"] = kv(n_attn)
+        return cache
+    if cfg.ssm == "xlstm":
+        n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        di_l = 2 * cfg.d_model // ctx.tp
+        nh_l = dims.h_pad // ctx.tp
+        hp = di_l // nh_l
+        cache = {"mlstm": {"c": jnp.zeros((n_m, b, nh_l, hp, hp), jnp.float32),
+                           "n": jnp.zeros((n_m, b, nh_l, hp), jnp.float32)}}
+        if n_s:
+            hps = (cfg.d_model // ctx.tp) // nh_l
+            z = jnp.zeros((n_s, b, nh_l, hps), jnp.float32)
+            cache["slstm"] = {"h": z, "c": z, "n": z, "m": z - 30.0}
+        return cache
+    if cfg.enc_dec:
+        return {"self": kv(cfg.n_layers),
+                "cross": kv(cfg.n_layers),  # filled at prefill from encoder
+                }
+    if cfg.moe and cfg.mla:
+        nm = cfg.n_layers - cfg.first_dense_layers
+        def mla(n):
+            return {"ckv": jnp.zeros((n, b, s_local, cfg.kv_lora_rank), jnp.int8),
+                    "scale": jnp.zeros((n, b, s_local, 1), jnp.float32),
+                    "krope": jnp.zeros((n, b, s_local, cfg.qk_rope_dim), dt)}
+        cache = {"moe": mla(nm)}
+        if cfg.first_dense_layers:
+            cache["dense"] = mla(cfg.first_dense_layers)
+        return cache
+    if cfg.moe:
+        nm = cfg.n_layers - cfg.first_dense_layers
+        cache = {"moe": kv(nm)}
+        if cfg.first_dense_layers:
+            cache["dense"] = kv(cfg.first_dense_layers)
+        return cache
+    return {"layers": kv(cfg.n_layers)}
+
+
+def decode_step(cfg: ModelConfig, ctx: ShardCtx, params, cache, token,
+                pos, enc_frames=None):
+    """One serving step: token (b, 1) -> logits (b, V_local), new cache.
+    pos: scalar int32, number of tokens already in the cache."""
+    b = token.shape[0]
+    x = embed_lookup(ctx, gather_fsdp(ctx, params["embed"], 1), token,
+                     cfg.vocab)
+    rpos = pos[None] if pos.ndim == 0 else pos
+    pos_arr = jnp.full((1,), 0) + pos
+
+    if cfg.ssm == "mamba2":
+        def mamba_body(x, pc):
+            p, c = pc
+            y, ns = blocks.mamba2_block(ctx, cfg, p, x, state=c)
+            return x + y, ns
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm = params["mamba"]["norm"].shape[0]
+        if n_attn:
+            per = n_ssm // n_attn
+            grouped = n_attn * per
+            gp = jax.tree.map(
+                lambda a: a[:grouped].reshape(n_attn, per, *a.shape[1:]),
+                params["mamba"])
+            gc = jax.tree.map(
+                lambda a: a[:grouped].reshape(n_attn, per, *a.shape[1:]),
+                cache["mamba"])
+            shared = params["shared_attn"]
+
+            def group_body(x, pcs):
+                p, c, ac = pcs
+                x, nc = lax.scan(mamba_body, x, (p, c))
+                a, nac = blocks.gqa_attention(ctx, cfg, shared, x, pos_arr,
+                                              cache=ac, cache_pos=pos)
+                x = x + a
+                h = rmsnorm(x, shared["mlp_norm"])
+                x = x + blocks.swiglu_mlp(ctx, h, shared["w_gate"],
+                                          shared["w_up"], shared["w_down"])
+                return x, (nc, nac)
+
+            x, (ncg, nac) = lax.scan(group_body, x,
+                                     (gp, gc, cache["attn"]))
+            new_mamba = jax.tree.map(
+                lambda a: a.reshape(grouped, *a.shape[2:]), ncg)
+            tailp = jax.tree.map(lambda a: a[grouped:], params["mamba"])
+            tailc = jax.tree.map(lambda a: a[grouped:], cache["mamba"])
+            if n_ssm - grouped:
+                x, ntail = lax.scan(mamba_body, x, (tailp, tailc))
+                new_mamba = jax.tree.map(
+                    lambda a, b_: jnp.concatenate([a, b_]), new_mamba, ntail)
+            new_cache = {"mamba": new_mamba, "attn": nac}
+        else:
+            x, nc = lax.scan(mamba_body, x, (params["mamba"], cache["mamba"]))
+            new_cache = {"mamba": nc}
+    elif cfg.ssm == "xlstm":
+        def mlstm_body(x, pc):
+            p, c = pc
+            y, ns = blocks.mlstm_block(ctx, cfg, p, x, state=c)
+            return x + y, ns
+        n_s = params.get("slstm", {"norm": jnp.zeros((0,))})["norm"].shape[0]
+        n_m = params["mlstm"]["norm"].shape[0]
+        if n_s:
+            per = n_m // n_s
+            gp = jax.tree.map(
+                lambda a: a[:n_s * per].reshape(n_s, per, *a.shape[1:]),
+                params["mlstm"])
+            gc = jax.tree.map(
+                lambda a: a[:n_s * per].reshape(n_s, per, *a.shape[1:]),
+                cache["mlstm"])
+
+            def group_body(x, pcs):
+                pm, cm, psl, csl = pcs
+                x, ncm = lax.scan(mlstm_body, x, (pm, cm))
+                y, ncs = blocks.slstm_block(ctx, cfg, psl, x, state=csl)
+                return x + y, (ncm, ncs)
+
+            x, (ncm, ncs) = lax.scan(group_body, x,
+                                     (gp, gc, params["slstm"], cache["slstm"]))
+            new_m = jax.tree.map(lambda a: a.reshape(n_s * per, *a.shape[2:]),
+                                 ncm)
+            tailp = jax.tree.map(lambda a: a[n_s * per:], params["mlstm"])
+            tailc = jax.tree.map(lambda a: a[n_s * per:], cache["mlstm"])
+            if n_m - n_s * per:
+                x, ntail = lax.scan(mlstm_body, x, (tailp, tailc))
+                new_m = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                                     new_m, ntail)
+            new_cache = {"mlstm": new_m, "slstm": ncs}
+        else:
+            x, ncm = lax.scan(mlstm_body, x, (params["mlstm"], cache["mlstm"]))
+            new_cache = {"mlstm": ncm}
+    elif cfg.enc_dec:
+        def dec_body(x, pc):
+            p, sc, cc = pc
+            x, nsc = _attn_mlp_layer(ctx, cfg, p, x, pos_arr, cache=sc,
+                                     cache_pos=pos)
+            xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+            a, _ = blocks.gqa_attention(ctx, cfg, xp, x, None,
+                                        kv_ext=(cc["k"], cc["v"]),
+                                        causal=False)
+            return x + a, nsc
+
+        x, nsc = lax.scan(dec_body, x,
+                          (params["decoder"], cache["self"], cache["cross"]))
+        new_cache = {"self": nsc, "cross": cache["cross"]}
+    elif cfg.moe:
+        def moe_body(x, pc, dense):
+            p, c = pc
+            x, nc, _ = _mla_moe_layer(ctx, cfg, p, x, pos_arr, cache=c,
+                                      cache_pos=pos, dense_mlp=dense)
+            return x, nc
+        new_cache = {}
+        if cfg.first_dense_layers:
+            x, nd = lax.scan(partial(moe_body, dense=True), x,
+                             (params["dense_layers"], cache["dense"]))
+            new_cache["dense"] = nd
+        x, nm = lax.scan(partial(moe_body, dense=False), x,
+                         (params["moe_layers"], cache["moe"]))
+        new_cache["moe"] = nm
+    else:
+        def body(x, pc):
+            p, c = pc
+            x, nc = _attn_mlp_layer(ctx, cfg, p, x, pos_arr, cache=c,
+                                    cache_pos=pos)
+            return x, nc
+        x, nc = lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": nc}
+
+    h = rmsnorm(x, params["final_norm"])
+    logits = (h[:, 0] @ gather_fsdp(ctx, params["lm_head"], 0)
+              ).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill_step(cfg: ModelConfig, ctx: ShardCtx, params, tokens,
+                 enc_frames=None):
+    """Inference prefill: forward over the prompt, returning last-token
+    logits and the populated KV cache / recurrent states."""
+    b, t = tokens.shape
+    pos = jnp.arange(t)
+    x = embed_lookup(ctx, gather_fsdp(ctx, params["embed"], 1), tokens,
+                     cfg.vocab)
+
+    if cfg.ssm == "mamba2":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm = params["mamba"]["norm"].shape[0]
+
+        def mamba_body(x, p):
+            y, st = blocks.mamba2_block(ctx, cfg, p, x)
+            return x + y, st
+
+        cache = {}
+        if n_attn:
+            per = n_ssm // n_attn
+            grouped = n_attn * per
+            gp = jax.tree.map(
+                lambda a: a[:grouped].reshape(n_attn, per, *a.shape[1:]),
+                params["mamba"])
+            shared = params["shared_attn"]
+
+            def group_body(x, p):
+                x, st = lax.scan(mamba_body, x, p)
+                x, kv = _attn_mlp_layer(ctx, cfg, shared, x, pos)
+                return x, (st, kv)
+
+            x, (sts, kvs) = lax.scan(group_body, x, gp)
+            sts = jax.tree.map(lambda a: a.reshape(grouped, *a.shape[2:]), sts)
+            if n_ssm - grouped:
+                tail = jax.tree.map(lambda a: a[grouped:], params["mamba"])
+                x, st_t = lax.scan(mamba_body, x, tail)
+                sts = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                                   sts, st_t)
+            cache = {"mamba": sts, "attn": kvs}
+        else:
+            x, sts = lax.scan(mamba_body, x, params["mamba"])
+            cache = {"mamba": sts}
+    elif cfg.ssm == "xlstm":
+        n_s = params.get("slstm", {"norm": jnp.zeros((0,))})["norm"].shape[0]
+        n_m = params["mlstm"]["norm"].shape[0]
+
+        def mlstm_body(x, p):
+            y, st = blocks.mlstm_block(ctx, cfg, p, x)
+            return x + y, st
+
+        if n_s:
+            per = n_m // n_s
+            gp = jax.tree.map(
+                lambda a: a[:n_s * per].reshape(n_s, per, *a.shape[1:]),
+                params["mlstm"])
+            dims = ArchDims.build(cfg, ctx)
+            nh_l = dims.h_pad // ctx.tp
+            hp_s = (cfg.d_model // ctx.tp) // nh_l
+            z0 = jnp.zeros((x.shape[0], nh_l, hp_s), jnp.float32)
+            s0 = {"h": z0, "c": z0, "n": z0, "m": z0 - 30.0}
+
+            def group_body(x, ps):
+                pm, psl = ps
+                x, stm = lax.scan(mlstm_body, x, pm)
+                y, sts = blocks.slstm_block(ctx, cfg, psl, x, state=s0)
+                return x + y, (stm, sts)
+
+            x, (stm, sts) = lax.scan(group_body, x, (gp, params["slstm"]))
+            stm = jax.tree.map(lambda a: a.reshape(n_s * per, *a.shape[2:]),
+                               stm)
+            if n_m - n_s * per:
+                tail = jax.tree.map(lambda a: a[n_s * per:], params["mlstm"])
+                x, st_t = lax.scan(mlstm_body, x, tail)
+                stm = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                                   stm, st_t)
+            cache = {"mlstm": stm, "slstm": sts}
+        else:
+            x, stm = lax.scan(mlstm_body, x, params["mlstm"])
+            cache = {"mlstm": stm}
+    elif cfg.enc_dec:
+        assert enc_frames is not None
+        e = enc_frames.astype(x.dtype)
+        epos = jnp.arange(e.shape[1])
+
+        def enc_body(e, p):
+            e, _ = _attn_mlp_layer(ctx, cfg, p, e, epos, causal=False)
+            return e, None
+
+        e, _ = lax.scan(enc_body, e, params["encoder"])
+
+        def dec_body(x, p):
+            x, kv = _attn_mlp_layer(ctx, cfg, p, x, pos)
+            xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+            kvl = xp["wk"].shape[-1] // cfg.hd
+            be, te = e.shape[0], e.shape[1]
+            ck = (e @ xp["wk"]).reshape(be, te, kvl, cfg.hd).transpose(0, 2, 1, 3)
+            cv = (e @ xp["wv"]).reshape(be, te, kvl, cfg.hd).transpose(0, 2, 1, 3)
+            a, _ = blocks.gqa_attention(ctx, cfg, xp, x, None,
+                                        kv_ext=(ck, cv), causal=False)
+            return x + a, (kv, {"k": ck, "v": cv})
+
+        x, (skv, ckv) = lax.scan(dec_body, x, params["decoder"])
+        cache = {"self": skv, "cross": ckv}
+    elif cfg.moe:
+        cache = {}
+        if cfg.first_dense_layers:
+            def dense_body(x, p):
+                x, kv, _ = _mla_moe_layer(ctx, cfg, p, x, pos, dense_mlp=True)
+                return x, kv
+            x, dkv = lax.scan(dense_body, x, params["dense_layers"])
+            cache["dense"] = dkv
+
+        def moe_body(x, p):
+            x, kv, _ = _mla_moe_layer(ctx, cfg, p, x, pos)
+            return x, kv
+
+        x, mkv = lax.scan(moe_body, x, params["moe_layers"])
+        cache["moe"] = mkv
+    else:
+        def body(x, p):
+            x, kv = _attn_mlp_layer(ctx, cfg, p, x, pos)
+            return x, kv
+
+        x, kvs = lax.scan(body, x, params["layers"])
+        cache = {"layers": kvs}
+
+    x = sp_gather(ctx, x)
+    h = rmsnorm(x[:, -1:], params["final_norm"])
+    logits = (h[:, 0] @ gather_fsdp(ctx, params["lm_head"], 0)
+              ).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,93 @@
+"""ResNet-50 in pure JAX (paper IV: trained on CIFAR-100 with OptINC).
+
+NHWC, GroupNorm instead of BatchNorm (no cross-device batch stats ⇒ the
+gradient sync is the ONLY cross-device communication, exactly the quantity
+OptINC replaces). CIFAR variant: 3x3 stem, no max-pool.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BLOCKS = (3, 4, 6, 3)
+WIDTHS = (64, 128, 256, 512)
+
+
+def conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c).astype(x.dtype) * scale + bias
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan)
+
+
+def init_params(key, classes: int = 100):
+    keys = iter(jax.random.split(key, 256))
+    p = {"stem": _conv_init(next(keys), 3, 3, 3, 64),
+         "stem_s": jnp.ones((64,)), "stem_b": jnp.zeros((64,))}
+    cin = 64
+    for si, (nb, w) in enumerate(zip(BLOCKS, WIDTHS)):
+        for bi in range(nb):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = {
+                "c1": _conv_init(next(keys), 1, 1, cin, w),
+                "c2": _conv_init(next(keys), 3, 3, w, w),
+                "c3": _conv_init(next(keys), 1, 1, w, 4 * w),
+            }
+            for j in (1, 2, 3):
+                cw = w if j < 3 else 4 * w
+                blk[f"s{j}"] = jnp.ones((cw,))
+                blk[f"b{j}"] = jnp.zeros((cw,))
+            if cin != 4 * w or stride != 1:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, 4 * w)
+                blk["proj_s"] = jnp.ones((4 * w,))
+                blk["proj_b"] = jnp.zeros((4 * w,))
+            p[f"block{si}_{bi}"] = blk
+            cin = 4 * w
+    p["head_w"] = jax.random.normal(next(keys), (cin, classes)) * 0.01
+    p["head_b"] = jnp.zeros((classes,))
+    return p
+
+
+def forward(p, x):
+    x = groupnorm(conv(x, p["stem"]), p["stem_s"], p["stem_b"])
+    x = jax.nn.relu(x)
+    cin = 64
+    for si, (nb, w) in enumerate(zip(BLOCKS, WIDTHS)):
+        for bi in range(nb):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = p[f"block{si}_{bi}"]
+            h = jax.nn.relu(groupnorm(conv(x, blk["c1"]), blk["s1"], blk["b1"]))
+            h = jax.nn.relu(groupnorm(conv(h, blk["c2"], stride), blk["s2"],
+                                      blk["b2"]))
+            h = groupnorm(conv(h, blk["c3"]), blk["s3"], blk["b3"])
+            if "proj" in blk:
+                x = groupnorm(conv(x, blk["proj"], stride), blk["proj_s"],
+                              blk["proj_b"])
+            x = jax.nn.relu(x + h)
+            cin = 4 * w
+    x = x.mean(axis=(1, 2))
+    return x @ p["head_w"] + p["head_b"]
+
+
+def loss_fn(p, images, labels):
+    logits = forward(p, images)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, acc

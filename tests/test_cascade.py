@@ -1,0 +1,35 @@
+"""Cascading topology (paper III-C): eq. 9 loses, eq. 10 is exact."""
+import numpy as np
+
+from repro.core import cascade
+
+
+def test_carry_cascade_exact_eq10():
+    rng = np.random.default_rng(0)
+    for n in (2, 4):
+        u = rng.integers(0, 255, size=(n, n, 5000))
+        exp = cascade.expected(u)
+        np.testing.assert_array_equal(cascade.carry_cascade(u), exp)
+
+
+def test_basic_cascade_loses_decimals():
+    rng = np.random.default_rng(1)
+    u = rng.integers(0, 255, size=(4, 4, 5000))
+    exp = cascade.expected(u)
+    bas = cascade.basic_cascade(u)
+    frac_wrong = (bas != exp).mean()
+    assert 0.01 < frac_wrong < 0.5  # two-level quantization visibly wrong
+    assert np.max(np.abs(bas - exp)) <= 1  # but only off-by-one
+
+
+def test_extra_symbols():
+    assert cascade.extra_symbols(4) == 1   # resolution 1/4 -> 1 PAM4 symbol
+    assert cascade.extra_symbols(16) == 2
+    assert cascade.extra_symbols(2) == 1
+
+
+def test_cascade_hardware_overhead_close_to_paper():
+    # paper: ~10.5% for scenario 1 expanded with two 64x64 approx matrices
+    ov = cascade.hardware_overhead((4, 64, 128, 256, 128, 64, 4),
+                                   tuple(range(1, 7)))
+    assert 0.05 < ov < 0.15, ov

@@ -1,0 +1,68 @@
+"""Checkpoint/restart: atomicity, corrupt-skip, elastic restore."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import latest_step
+
+
+def _tree():
+    k = jax.random.PRNGKey(0)
+    return {"layers": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,))},
+            "embed": jax.random.normal(k, (32, 8))}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 7, t)
+    assert latest_step(tmp_path) == 7
+    got, man = load_checkpoint(tmp_path, 7, {"params": t})
+    for a, b in zip(jax.tree.leaves(got["params"]), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert man["step"] == 7
+
+
+def test_corrupt_checkpoint_skipped(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 2, t)
+    # corrupt the newest
+    (tmp_path / "step_2" / "manifest.json").write_text("{broken")
+    assert latest_step(tmp_path) == 1
+
+
+def test_tmp_dir_never_counts(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 3, t)
+    (tmp_path / "step_9.tmp").mkdir()
+    assert latest_step(tmp_path) == 3
+
+
+def test_manager_keeps_last_k(tmp_path):
+    t = _tree()
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps[-1] == 4 and len(steps) <= 3
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Save unsharded, restore onto a 1x1 mesh with explicit specs."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    specs = {"params": {"layers": {"w": P(None, "model"), "b": P(None)},
+                        "embed": P("model", None)}}
+    got, _ = load_checkpoint(tmp_path, 5, {"params": t}, mesh=mesh,
+                             specs=specs)
+    np.testing.assert_array_equal(np.asarray(got["params"]["embed"]),
+                                  np.asarray(t["embed"]))

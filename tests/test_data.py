@@ -1,0 +1,38 @@
+"""Data pipeline determinism (fault-tolerance contract)."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+
+
+def test_deterministic_by_step():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+    a = SyntheticLM(cfg).batch(12)
+    b = SyntheticLM(cfg).batch(12)  # fresh instance = restarted worker
+    np.testing.assert_array_equal(a, b)
+    c = SyntheticLM(cfg).batch(13)
+    assert not np.array_equal(a, c)
+
+
+def test_shards_disjoint_streams():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+    s0 = SyntheticLM(cfg, shard=0, num_shards=2).batch(5)
+    s1 = SyntheticLM(cfg, shard=1, num_shards=2).batch(5)
+    assert s0.shape == (4, 65)
+    assert not np.array_equal(s0, s1)
+
+
+def test_tokens_in_vocab():
+    cfg = DataConfig(vocab=321, seq_len=32, global_batch=4)
+    b = SyntheticLM(cfg).batch(0)
+    assert b.min() >= 0 and b.max() < 321
+
+
+def test_bigram_structure_learnable():
+    """The deterministic bigram component must be present (conditional
+    entropy visibly below unigram entropy)."""
+    cfg = DataConfig(vocab=50, seq_len=2000, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    ds = SyntheticLM(cfg)
+    follows = sum(int(b[i, t] == ds.shift[b[i, t - 1]])
+                  for i in range(2) for t in range(1, 2001))
+    assert follows / (2 * 2000) > 0.3

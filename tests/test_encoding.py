@@ -1,0 +1,79 @@
+"""PAM4 encoding / quantization / preprocessing unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_pam4_roundtrip_exhaustive_or_sampled(bits):
+    n = 2 ** bits
+    vals = (jnp.arange(0, n - 1, dtype=jnp.int32) if bits <= 8 else
+            jnp.asarray(np.random.default_rng(0).integers(0, n - 1, 4096)))
+    sym = enc.pam4_encode(vals, bits)
+    assert sym.shape[-1] == enc.num_symbols(bits)
+    assert int(sym.max()) <= 3 and int(sym.min()) >= 0
+    assert (enc.pam4_decode(sym) == vals).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.integers(2, 16), v=st.integers(0, 2 ** 16 - 2))
+def test_pam4_roundtrip_property(bits, v):
+    v = v % (2 ** bits - 1)
+    sym = enc.pam4_encode(jnp.asarray([v]), bits)
+    assert int(enc.pam4_decode(sym)[0]) == v
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64))
+def test_quantize_error_bound(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    spec = enc.QuantSpec(bits=8, block=0)
+    u, s = enc.quantize(g, spec)
+    gd = enc.dequantize(u, s, spec)
+    # quantization error bounded by half an LSB step
+    step = float(s[0]) / spec.levels
+    assert float(jnp.max(jnp.abs(g - gd))) <= 0.5 * step + 1e-6
+
+
+def test_quantize_idempotent():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    spec = enc.QuantSpec(bits=8, block=64)
+    u, s = enc.quantize(g, spec)
+    gd = enc.dequantize(u, s, spec)
+    u2, _ = enc.quantize(gd, spec, scale=s)
+    assert (u == u2).all()
+
+
+def test_qmean_matches_eq3():
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.integers(0, 254, (8, 1000)))
+    got = enc.qmean(u)
+    want = np.round(np.asarray(u, np.float64).sum(0) / 8).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("bits,k,n", [(8, 4, 4), (8, 4, 8), (16, 4, 4),
+                                      (8, 2, 4), (6, 3, 2)])
+def test_preprocess_oracle_equals_expected(bits, k, n):
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.integers(0, 2 ** bits - 1, (n, 500)))
+    sym = enc.pam4_encode(u, bits)
+    a = enc.preprocess(sym, bits, k)
+    assert a.shape[-1] == k
+    g = enc.preprocess_group_size(bits, k)
+    assert float(a.max()) <= 4 ** g - 1
+    out = enc.oracle_from_preprocessed(a, bits, k)
+    want = enc.expected_avg_symbols(sym, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_splitter_broadcasts():
+    sym = jnp.asarray([[1, 2, 3]])
+    out = enc.splitter(sym, 5)
+    assert out.shape == (5, 1, 3)
+    assert (out == sym[None]).all()

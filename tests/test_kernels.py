@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention as attn_k
+from repro.kernels import onn_layer as onn_k
+from repro.kernels import pam4 as pam4_k
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("shape", [(8, 128), (32, 256), (16, 1024)])
+def test_pam4_encode_kernel(bits, shape):
+    g = jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+    scale = jnp.max(jnp.abs(g), axis=1)
+    u = pam4_k.pam4_quantize_encode(g, scale, bits)
+    u_ref = ref.pam4_quantize_encode_ref(g, scale, bits, shape[1])
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(u_ref))
+
+
+@pytest.mark.parametrize("n", [2, 4, 16])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_pam4_decode_kernel(n, bits):
+    shape = (16, 256)
+    levels = 2 ** (bits - 1) - 1
+    total = jnp.asarray(
+        RNG.integers(0, n * 2 * levels, size=shape).astype(np.int32))
+    scale = jnp.asarray(RNG.uniform(0.5, 2.0, shape[0]).astype(np.float32))
+    out = pam4_k.pam4_decode_dequantize(total, scale, bits, n)
+    want = ref.pam4_decode_dequantize_ref(ref.pam4_qmean_ref(total, n),
+                                          scale, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bsz,m,n", [(128, 128, 128), (256, 128, 256),
+                                     (128, 256, 384), (384, 512, 128)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_onn_layer_kernel(bsz, m, n, relu):
+    x = jnp.asarray(RNG.normal(size=(bsz, n)).astype(np.float32))
+    q, _ = np.linalg.qr(RNG.normal(size=(max(m, n), max(m, n))))
+    u = jnp.asarray(q[:m, :n].astype(np.float32))
+    d = jnp.asarray(RNG.normal(size=(m,)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(m,)).astype(np.float32))
+    y = onn_k.onn_layer(x, u, d, b, relu=relu)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.onn_layer_ref(x, u, d, b, relu)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("sq,skv,d,causal", [
+    (256, 256, 64, True), (128, 512, 64, True), (256, 256, 128, False),
+    (512, 512, 64, True)])
+def test_flash_attention_kernel(sq, skv, d, causal):
+    q = jnp.asarray(RNG.normal(size=(sq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(skv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(skv, d)).astype(np.float32))
+    o = attn_k.flash_attention(q, k, v, causal=causal)
+    o_ref = ref.mha_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jnp.asarray(RNG.normal(size=(128, 64))).astype(dtype)
+    k = jnp.asarray(RNG.normal(size=(128, 64))).astype(dtype)
+    v = jnp.asarray(RNG.normal(size=(128, 64))).astype(dtype)
+    o = attn_k.flash_attention(q, k, v)
+    o_ref = ref.mha_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                 - o_ref.astype(jnp.float32)))) < tol
+
+
+def test_blocked_attention_matches_kernel_math():
+    """The model-side jnp blocked attention is the same math as the Pallas
+    kernel (they must agree to float tolerance)."""
+    from repro.models.layers import blocked_attention
+    q = jnp.asarray(RNG.normal(size=(1, 4, 256, 64)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)).astype(np.float32))
+    a = blocked_attention(q, k, v, causal=True, blk_q=64, blk_kv=64)
+    kk = jnp.repeat(k, 2, 1)
+    vv = jnp.repeat(v, 2, 1)
+    b = jax.vmap(jax.vmap(lambda q, k, v: attn_k.flash_attention(
+        q, k, v, causal=True, blk_q=64, blk_k=64)))(q, kk, vv)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-5

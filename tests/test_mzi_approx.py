@@ -1,0 +1,83 @@
+"""MZI decomposition, matrix approximation, and area model (Tables I/II)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import approx, area, mzi
+
+
+@pytest.mark.parametrize("m", [2, 4, 8, 16, 32])
+def test_givens_reconstruction(m):
+    rng = np.random.default_rng(m)
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    prog = mzi.givens_decompose(q)
+    assert len(prog.rotations) <= m * (m - 1) // 2
+    np.testing.assert_allclose(mzi.reconstruct(prog), q, atol=1e-9)
+
+
+def test_givens_rejects_nonorthogonal():
+    with pytest.raises(ValueError):
+        mzi.givens_decompose(np.ones((4, 4)))
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (32, 16), (16, 32), (64, 4)])
+def test_svd_programming(shape):
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=shape)
+    pu, s, pv = mzi.program_matrix_svd(w)
+    x = rng.normal(size=(shape[1], 5))
+    np.testing.assert_allclose(mzi.apply_programmed_svd(pu, s, pv, x),
+                               w @ x, atol=1e-8)
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (16, 8), (8, 16), (64, 4)])
+def test_approx_block_structure(shape):
+    """W_a = Sigma_a U_a: each block must have orthogonal scaled rows, and
+    re-approximating is a fixed point."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    wa = approx.approx_matrix(w)
+    wa2 = approx.approx_matrix(wa)
+    np.testing.assert_allclose(np.asarray(wa), np.asarray(wa2), atol=1e-4)
+    # projection reduces (or keeps) distance: ||W - Wa|| <= ||W|| (Procrustes)
+    assert float(jnp.linalg.norm(w - wa)) <= float(jnp.linalg.norm(w))
+
+
+def test_approx_exact_for_structured_matrix():
+    """A matrix that already is diag @ orthogonal is reproduced exactly."""
+    rng = np.random.default_rng(2)
+    q, _ = np.linalg.qr(rng.normal(size=(16, 16)))
+    w = jnp.asarray((np.diag(rng.normal(size=16)) @ q).astype(np.float32))
+    wa = approx.approx_matrix(w)
+    np.testing.assert_allclose(np.asarray(wa), np.asarray(w), atol=1e-5)
+
+
+TABLE1 = [
+    ((4, 64, 128, 256, 128, 64, 4), set(range(1, 7)), 0.393),
+    ((4, 64, 128, 256, 512, 256, 128, 64, 4), set(range(2, 8)), 0.409),
+    ((4, 64, 128, 256, 512, 1024, 512, 256, 128, 64, 4), set(range(2, 10)), 0.404),
+    ((4, 64, 128, 256, 512, 256, 128, 64, 8), {4, 5, 6}, 0.493),
+]
+
+
+@pytest.mark.parametrize("structure,approx_layers,paper", TABLE1)
+def test_area_ratio_matches_table1(structure, approx_layers, paper):
+    r = area.area_ratio(list(structure), approx_layers)
+    assert abs(r - paper) < 0.005, (r, paper)
+
+
+TABLE2 = [({4, 5, 6}, 0.493), ({4, 5, 6, 7}, 0.479), ({4, 5, 6, 7, 8}, 0.474),
+           ({3, 4, 5, 6}, 0.437), ({3, 4, 5, 6, 7}, 0.422)]
+
+
+@pytest.mark.parametrize("layers,paper", TABLE2)
+def test_area_ratio_matches_table2(layers, paper):
+    st4 = [4, 64, 128, 256, 512, 256, 128, 64, 8]
+    assert abs(area.area_ratio(st4, layers) - paper) < 0.005
+
+
+def test_mzi_count_halved_by_approx():
+    # square matrix: approx saves the V mesh => ~50%
+    full = area.mzi_count_svd(64, 64)
+    ap = area.mzi_count_approx(64, 64)
+    assert 0.45 < ap / full < 0.55

@@ -1,0 +1,75 @@
+"""ONN training (hardware-aware, both constraint modes) + MZI mapping."""
+import numpy as np
+import pytest
+
+from repro.core import dataset, onn, training
+from repro.core.onn import ONNConfig
+
+TINY = ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
+                 bits=4, n_servers=2, k_inputs=2)
+
+
+def test_dataset_sizes_match_paper_formula():
+    cfg = ONNConfig(structure=(4,), approx_layers=(), bits=8, n_servers=4,
+                    k_inputs=4)
+    # (N(4^g - 1) + 1)^K with g=1: (4*3+1)^4 = 13^4
+    assert dataset.dataset_size(cfg) == 13 ** 4
+    cfg16 = ONNConfig(structure=(4,), approx_layers=(), bits=16, n_servers=4,
+                      k_inputs=4)
+    # g=2: (4*15+1)^4 = 61^4
+    assert dataset.dataset_size(cfg16) == 61 ** 4
+
+
+def test_server_side_dataset_consistent_with_grid():
+    rng = np.random.default_rng(0)
+    cfg = ONNConfig(structure=(4,), approx_layers=(), bits=8, n_servers=4,
+                    k_inputs=4)
+    a, t = dataset.server_side_dataset(cfg, rng, 200)
+    from repro.core import encoding as enc
+    out = np.asarray(enc.oracle_from_preprocessed(a, 8, 4))
+    np.testing.assert_array_equal(out, t)
+
+
+@pytest.mark.parametrize("mode", ["project", "cayley"])
+def test_training_reaches_full_accuracy_tiny(mode):
+    a, t = dataset.full_dataset(TINY)
+    tc = training.TrainConfig(epochs=3000, e1=2500, lr=1e-2, mode=mode,
+                              proj_every=200)
+    params, hist = training.train(TINY, tc, a, t, eval_every=200,
+                                  target_acc=1.0)
+    acc = training.accuracy(params, a, t, TINY)
+    # paper: 100%. cayley (constraint-exact) reaches it; the paper's
+    # periodic-projection algorithm carries projection error at this tiny
+    # budget, so it gets a slightly looser bar.
+    floor = 0.98 if mode == "cayley" else 0.93
+    assert acc >= floor, acc
+    # hardware structure enforced on the approximated layers
+    from repro.core import approx
+    for idx, layer in enumerate(params, start=1):
+        if idx in TINY.approx_layers:
+            assert approx.approx_error(layer["w"]) < 1e-4
+
+
+def test_two_stage_loss_switches():
+    a, t = dataset.full_dataset(TINY)
+    tc = training.TrainConfig(epochs=4, e1=2, lr=1e-3)
+    _, hist = training.train(TINY, tc, a, t)
+    assert [h["stage"] for h in hist] == [1, 1, 2, 2]
+
+
+def test_hardware_mapping_matches_software():
+    """Givens-programmed MZI meshes reproduce the trained network function."""
+    a, t = dataset.full_dataset(TINY)
+    tc = training.TrainConfig(epochs=300, e1=300, lr=1e-2)
+    params, _ = training.train(TINY, tc, a, t)
+    hw = onn.map_to_hardware(params, TINY)
+    sw = np.asarray(training.apply_onn(params, a[:64], TINY))
+    hwout = onn.apply_hardware(hw, a[:64], TINY)
+    np.testing.assert_allclose(hwout, sw, atol=1e-3)
+
+
+def test_error_histogram_keys_are_ints():
+    a, t = dataset.full_dataset(TINY)
+    params = onn.init_params(TINY, __import__("jax").random.PRNGKey(0))
+    errs = training.error_histogram(params, a, t, TINY)
+    assert all(isinstance(k, int) for k in errs)
