@@ -24,7 +24,9 @@ def timed(fn, *args, repeats=3, **kw):
 
 
 def run_subprocess(code: str, devices: int = 0, timeout: int = 2400) -> str:
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    import os
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     if devices:
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,

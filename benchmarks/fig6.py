@@ -1,19 +1,29 @@
 """Paper Fig. 6: communication data (normalized by gradient bytes) for
-ring all-reduce vs OptINC at N = 4, 8, 16 servers.
+ring all-reduce vs OptINC (and the III-C cascade) at N = 4, 8, 16 servers.
 
 Two measurements:
-  analytic — the paper's model: ring moves 2(N-1)/N units per direction
-             (reduce-scatter + all-gather); OptINC moves exactly 1 unit
-             (one send, one receive through the optical network).
+  analytic — per-backend wire bytes from the collective engine's own
+             accounting hooks (backend.bytes_on_wire, EXPERIMENTS.md
+             §Fig6), normalized by the bf16 gradient bytes: ring moves
+             2(N-1)/N units, OptINC ~B/16 units (one quantized send),
+             cascade adds the amortized level-1 -> level-2 carry link.
   measured — the per-device wire bytes parsed from the COMPILED HLO of the
-             paper-LLaMA train step on an N-device mesh, for sync modes
-             ring / optinc / psum (this framework's programs, not formulas).
+             paper-LLaMA train step on an N-device mesh, for every
+             registered sync mode (this framework's programs, not
+             formulas). cascade runs on a (pod=2, data=N/2) mesh.
 """
 from __future__ import annotations
 
 import json
+import sys
 
 from .common import emit, run_subprocess
+
+sys.path.insert(0, "src")
+
+from repro.collectives import get_backend  # noqa: E402
+
+MODES = ("ring", "optinc", "psum", "cascade")
 
 MEASURE = """
 import os
@@ -21,25 +31,30 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
 import json
 import jax, jax.numpy as jnp
 from repro import configs
-from repro.core.collective import SyncConfig
+from repro.collectives import SyncConfig, expected_buckets
 from repro.launch.mesh import make_mesh
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_ctx, make_train_step
 from repro.launch.roofline import parse_collectives
 from repro.launch.dryrun import batch_sds, opt_sds
 from repro.models import lm
 from repro.optim import AdamWConfig
 
 cfg = configs.get("paper_llama")
-mesh = make_mesh(({n}, 1), ("data", "model"))
 out = {{}}
 p_sds = None
-for mode in ("ring", "optinc", "psum"):
-    sync = SyncConfig(mode=mode, axes=("data",), bits=8, block=2048)
+for mode in {modes}:
+    if mode == "cascade":
+        mesh = make_mesh((2, {n} // 2, 1), ("pod", "data", "model"))
+        axes = ("pod", "data")
+    else:
+        mesh = make_mesh(({n}, 1), ("data", "model"))
+        axes = ("data",)
+    sync = SyncConfig(mode=mode, axes=axes, bits=8, block=2048,
+                      bucket_bytes={bucket_bytes})
     step, _, _ = make_train_step(cfg, mesh, sync, AdamWConfig())
-    from repro.launch.steps import make_ctx
     ctx = make_ctx(mesh)
     p_sds = lm.param_shape_dtype(cfg, ctx)
-    args = (p_sds, opt_sds(p_sds), batch_sds(cfg, 512, {n}),
+    args = (p_sds, opt_sds(p_sds), {{}}, batch_sds(cfg, 512, {n}),
             jax.eval_shape(lambda: jax.random.PRNGKey(0)))
     with jax.set_mesh(mesh):
         compiled = jax.jit(step).lower(*args).compile()
@@ -48,23 +63,48 @@ for mode in ("ring", "optinc", "psum"):
     out[mode] = {{"colls": colls, "result_bytes": total}}
 nparams = sum(s.size for s in jax.tree.leaves(p_sds))
 out["grad_bytes_bf16"] = nparams * 2
+out["bucket_budget"] = expected_buckets(nparams * 4, {bucket_bytes})
 print(json.dumps(out))
 """
+
+BUCKET_BYTES = 4 * 2 ** 20
+
+
+def analytic(n: int, bits: int = 8) -> dict:
+    """Normalized per-backend wire units (vs bf16 gradient bytes) from the
+    engine's bytes_on_wire hooks.  The cascade row uses the same
+    (pod=2, data=n/2) split as the measured mesh so the two rows describe
+    one topology."""
+    nbytes = 2.0 * 1_000_000  # 1M bf16 gradient elements
+    out = {m: get_backend(m).bytes_on_wire(nbytes, n, bits) / nbytes
+           for m in MODES if m != "cascade"}
+    out["cascade"] = get_backend("cascade").bytes_on_wire(
+        nbytes, n, bits, n1=max(n // 2, 1)) / nbytes
+    return out
 
 
 def main(full: bool = False):
     for n in (4, 8, 16):
-        ring = 2 * (n - 1) / n
+        units = analytic(n)
+        ring = units["ring"]
         emit(f"fig6.analytic.N{n}", 0.0,
-             f"ring={ring:.3f} optinc=1.0 overhead_eliminated={(n - 2) / n:.3f}")
+             " ".join(f"{m}={units[m]:.3f}" for m in MODES)
+             + f" overhead_vs_optinc={(ring - units['optinc']) / ring:.3f}")
     for n in ((4, 8, 16) if full else (8,)):
-        stdout = run_subprocess(MEASURE.format(n=n), timeout=2400)
+        stdout = run_subprocess(
+            MEASURE.format(n=n, modes=repr(MODES),
+                           bucket_bytes=BUCKET_BYTES), timeout=2400)
         rec = json.loads(stdout.strip().splitlines()[-1])
         gb = rec["grad_bytes_bf16"]
-        for mode in ("ring", "optinc", "psum"):
+        for mode in MODES:
             rb = rec[mode]["result_bytes"]
+            n_rs = sum(v["count"] for k, v in rec[mode]["colls"].items()
+                       if k.startswith("reduce-scatter"))
             emit(f"fig6.measured_hlo.N{n}.{mode}", 0.0,
-                 f"collective_result_bytes={rb} norm_vs_bf16_grads={rb / gb:.3f}")
+                 f"collective_result_bytes={rb} "
+                 f"norm_vs_bf16_grads={rb / gb:.3f} "
+                 f"reduce_scatter_launches={n_rs} "
+                 f"bucket_budget={rec['bucket_budget']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,226 @@
+"""Collective backends: psum | ring | optinc | cascade.
+
+Each backend synchronizes ONE fused f32 bucket inside shard_map (see
+bucketizer.py) and models its own wire bytes for the benchmarks
+(EXPERIMENTS.md §Fig6).  ``cascade`` is the paper's III-C two-level
+carry-cascade (eq. 8-10) made a first-class runtime mode: level-1 OptINCs
+reduce over the innermost sync axis and emit the average at resolution
+1/N1 — carried losslessly as the integer partial sum, the ICI analogue of
+the ``extra_symbols`` higher-precision PAM4 code — and level 2 reduces
+across the remaining axes and quantizes ONCE (eq. 10), so the result is
+bit-exact against core.cascade.carry_cascade / the one-shot eq. 8 average.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import error_model
+from ..core.cascade import extra_symbols
+from ..core.encoding import QuantSpec, compute_scale
+from .registry import register_backend
+
+_F32_TINY = 1.1754944e-38  # jnp.finfo(jnp.float32).tiny
+
+
+def _axis_size(axes) -> int:
+    n = 1
+    for ax in axes:
+        n *= lax.axis_size(ax)
+    return n
+
+
+def _shared_scale(flat: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Per-block max-abs scale shared across all peers of cfg.axes (the
+    paper's global block quantization, <0.4% sync cost)."""
+    spec = QuantSpec(bits=cfg.bits, block=cfg.block)
+    scale = compute_scale(flat, spec)
+    for ax in cfg.axes:
+        scale = lax.pmax(scale, ax)
+    return scale
+
+
+def _encode(flat: jnp.ndarray, scale: jnp.ndarray, cfg):
+    """f32 bucket -> offset-binary B-bit codes, zero-block safe.
+
+    An all-zero block (on every peer) leaves ``scale`` at the f32-tiny
+    floor; dividing denormal-adjacent values by it can overflow to inf
+    before the clip.  Blocks with scale at the floor are short-circuited
+    to the zero code instead (regression-tested).
+    """
+    spec = QuantSpec(bits=cfg.bits, block=cfg.block)
+    zero_block = scale <= _F32_TINY
+    safe = jnp.where(zero_block, 1.0, scale)
+    block = max(cfg.block, 1) if cfg.block > 0 else flat.size
+    pad = (-flat.size) % max(block, 1)
+    blocks = jnp.pad(flat, (0, pad)).reshape(scale.shape[0], -1)
+    q = jnp.round(blocks / safe[:, None] * spec.levels)
+    q = jnp.clip(q, -spec.levels, spec.levels).astype(jnp.int32)
+    q = jnp.where(zero_block[:, None], 0, q)
+    return q + spec.levels, q, safe, spec  # offset-binary u, signed q
+
+
+def _decode(q_signed: jnp.ndarray, safe_scale: jnp.ndarray, spec,
+            size: int) -> jnp.ndarray:
+    deq = q_signed.astype(jnp.float32) * (safe_scale[:, None] / spec.levels)
+    return deq.reshape(-1)[:size]
+
+
+class PsumBackend:
+    """XLA-native exact all-reduce mean (reference)."""
+    name = "psum"
+
+    def sync(self, flat, cfg, key):
+        axes = cfg.axes[0] if len(cfg.axes) == 1 else cfg.axes
+        return lax.pmean(flat, axes), None
+
+    def bytes_on_wire(self, nbytes: float, n: int, bits: int) -> float:
+        # ring-equivalent all-reduce: RS + AG, (N-1)/N of the payload each
+        return 2.0 * (n - 1) / max(n, 1) * nbytes
+
+
+def _ring_allreduce_flat(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Manual ring all-reduce of one bucket over one mesh axis:
+    reduce-scatter then all-gather, each via (N-1) ppermute rounds
+    (paper Fig. 1)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    pad = (-x.shape[0]) % n
+    chunks = jnp.pad(x, (0, pad)).reshape(n, -1)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    # Rounds are Python-unrolled so every ppermute appears in the HLO
+    # (static collective accounting sees all 2(N-1) rounds) and XLA can
+    # overlap consecutive rounds.
+    for r in range(n - 1):
+        sent = lax.ppermute(chunks[(idx - r) % n], axis, fwd)
+        chunks = chunks.at[(idx - r - 1) % n].add(sent)
+    for r in range(n - 1):
+        sent = lax.ppermute(chunks[(idx + 1 - r) % n], axis, fwd)
+        chunks = chunks.at[(idx - r) % n].set(sent)
+    return chunks.reshape(-1)[: x.shape[0]]
+
+
+class RingBackend:
+    """Faithful ring all-reduce (the paper's baseline, 2(N-1)/N blow-up)."""
+    name = "ring"
+
+    def sync(self, flat, cfg, key):
+        out = flat
+        for ax in cfg.axes:
+            out = _ring_allreduce_flat(out, ax)
+        return out / _axis_size(cfg.axes), None
+
+    def bytes_on_wire(self, nbytes: float, n: int, bits: int) -> float:
+        return 2.0 * (n - 1) / max(n, 1) * nbytes
+
+
+def _quantized_sync(flat, cfg, key, scatter_plan):
+    """Shared quantize -> integer reduce -> Q(mean) -> dequantize path.
+
+    ``scatter_plan`` is the ordered (axis, int_dtype) reduce-scatter
+    schedule; each stage runs in a dtype wide enough for its partial sum.
+    The all-gather unwinds the plan in reverse.  Returns
+    (synced, local_quantization_error) — the error is what this device's
+    transceiver lost encoding its own gradient (error feedback).
+    """
+    n = _axis_size(cfg.axes)
+    scale = _shared_scale(flat, cfg)
+    u, q, safe, spec = _encode(flat, scale, cfg)
+    flat_u = u.reshape(-1)
+    parts = jnp.pad(flat_u, (0, (-flat_u.size) % n))
+    for ax, dt in scatter_plan:
+        parts = lax.psum_scatter(parts.astype(dt), ax,
+                                 scatter_dimension=0, tiled=True)
+    # single quantization of the reduced output (eq. 3 / eq. 10)
+    u_avg = jnp.round(parts.astype(jnp.float32) / n).astype(jnp.int32)
+    if cfg.error_layers and key is not None:
+        spec_err = error_model.TABLE_II[tuple(cfg.error_layers)]
+        u_avg = error_model.inject(key, u_avg, spec_err, cfg.bits)
+    ag_dt = jnp.uint8 if cfg.bits <= 8 else jnp.uint16
+    coded = u_avg.astype(ag_dt)
+    for ax, _ in reversed(scatter_plan):
+        coded = lax.all_gather(coded, ax, axis=0, tiled=True)
+    u_avg = coded[: flat_u.size].astype(jnp.int32).reshape(u.shape)
+    out = _decode(u_avg - spec.levels, safe, spec, flat.size)
+    local = _decode(q, safe, spec, flat.size)
+    return out, flat - local
+
+
+class OptincBackend:
+    """Quantize -> integer in-network sum -> Q(mean) -> dequantize.
+
+    The TPU ICI analogue of the optical sum keeps the wire at symbol
+    width: reduce-scatter the B-bit codes in the narrowest integer type
+    holding the N-way sum, apply the ONN transfer function Q(mean) on the
+    scattered shard (eq. 3), all-gather the B-bit result.
+    """
+    name = "optinc"
+
+    def sync(self, flat, cfg, key):
+        n = _axis_size(cfg.axes)
+        max_sum = (2 ** cfg.bits - 2) * n
+        rs_dt = jnp.int16 if max_sum < 2 ** 15 else jnp.int32
+        plan = [(ax, rs_dt) for ax in cfg.axes]
+        return _quantized_sync(flat, cfg, key, plan)
+
+    def bytes_on_wire(self, nbytes: float, n: int, bits: int) -> float:
+        # one send of the B-bit codes into the optical fabric per server
+        # (receive is symmetric; send-direction accounting)
+        return (nbytes / 2.0) * bits / 8.0
+
+
+class CascadeBackend:
+    """Two-level carry-cascade (paper III-C eq. 10) over >= 2 mesh axes.
+
+    cfg.axes = (level2_axis, ..., level1_axis): the LAST axis is the
+    within-pod level-1 OptINC group; the rest are the cross-pod level-2
+    fabric.  Level 1 reduce-scatters the B-bit codes and keeps the exact
+    integer partial sum (= N1 x the level-1 average at resolution 1/N1 —
+    the decimal part d of eq. 10 carried in ceil(log4 N1) extra PAM4
+    symbols, here as dtype headroom).  Level 2 sums the carried values
+    and quantizes once, so the result equals the one-shot eq. 8 average.
+    """
+    name = "cascade"
+
+    def sync(self, flat, cfg, key):
+        if len(cfg.axes) < 2:
+            raise ValueError(
+                "cascade sync needs >= 2 mesh axes (level-2..., level-1), "
+                f"got {cfg.axes!r}; run with a (pod, data) mesh")
+        lvl1_ax = cfg.axes[-1]
+        lvl2_axes = cfg.axes[:-1]
+        n1 = lax.axis_size(lvl1_ax)
+        # level 1: within-pod optical sum of B-bit codes in the narrowest
+        # type holding the N1-way sum.  The carried code is
+        # B + 2*extra_symbols(N1) bits wide on the optical wire; the
+        # runtime carries that precision as dtype headroom (bytes_on_wire
+        # models the wire width).  Level 2 sums the carried (exact,
+        # resolution-1/N1) values across pods in int32, and
+        # _quantized_sync quantizes ONCE (eq. 10 == eq. 8).
+        max_sum1 = (2 ** cfg.bits - 2) * n1
+        l1_dt = jnp.int16 if max_sum1 < 2 ** 15 else jnp.int32
+        plan = [(lvl1_ax, l1_dt)] + [(ax, jnp.int32) for ax in lvl2_axes]
+        return _quantized_sync(flat, cfg, key, plan)
+
+    def bytes_on_wire(self, nbytes: float, n: int, bits: int,
+                      n1: int | None = None) -> float:
+        # per-server uplink (B bits/elem) + its amortized share of the
+        # level-1 -> level-2 link carrying B + 2*ceil(log4 N1) bits/elem.
+        # n1 is the level-1 (per-OptINC) group size; defaults to the
+        # paper's balanced sqrt(N) split — pass the actual split when
+        # comparing against a measured topology (e.g. fig6's pod=2 mesh).
+        if n1 is None:
+            n1 = max(int(round(n ** 0.5)), 1)
+        elems = nbytes / 2.0
+        uplink = elems * bits / 8.0
+        carry = elems * (bits + 2 * extra_symbols(n1)) / 8.0 / n1
+        return uplink + carry
+
+
+register_backend("psum", PsumBackend())
+register_backend("ring", RingBackend())
+register_backend("optinc", OptincBackend())
+register_backend("cascade", CascadeBackend())

@@ -1,0 +1,48 @@
+"""Pluggable collective-backend registry.
+
+A backend owns ONE bucket's synchronization inside shard_map plus the
+analytic wire-byte model the benchmarks consume (EXPERIMENTS.md §Fig6):
+
+  sync(flat, cfg, key) -> (synced, local_err | None)
+      ``flat`` is a 1-D float32 fused bucket, identical math on every
+      peer of ``cfg.axes``.  ``local_err`` is this device's quantization
+      error (for error feedback) or None for exact backends.
+
+  bytes_on_wire(nbytes, n, bits) -> float
+      Per-device send-direction wire bytes to synchronize ``nbytes`` of
+      raw bf16 gradient across ``n`` peers at gradient width ``bits``.
+
+Register custom engines with ``register_backend`` (e.g. experiment
+forks, hardware simulators); the runtime resolves ``SyncConfig.mode``
+through ``get_backend`` so a registered name is immediately usable as
+``--sync <name>``.
+"""
+from __future__ import annotations
+
+_REGISTRY: dict = {}
+
+
+def register_backend(name: str, backend, overwrite: bool = False):
+    """Register ``backend`` (an object with sync/bytes_on_wire) under
+    ``name``. Returns the backend so it can be used as a decorator-ish
+    one-liner at definition sites."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"collective backend {name!r} already registered")
+    for attr in ("sync", "bytes_on_wire"):
+        if not callable(getattr(backend, attr, None)):
+            raise TypeError(f"backend {name!r} lacks a callable {attr}()")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sync mode {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,76 @@
+"""jax version compatibility shims.
+
+The codebase targets the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); the container pins jax
+0.4.37 where those live elsewhere or don't exist.  Importing this module
+installs fallbacks onto the ``jax`` namespace so every call site — runtime
+modules, tests, and the inline subprocess scripts in tests/benchmarks
+(which use ``jax.shard_map`` / ``jax.set_mesh`` directly after importing a
+repro module) — works on both API generations:
+
+  jax.shard_map   -> jax.experimental.shard_map.shard_map, translating the
+                     ``check_vma`` kwarg to 0.4.x's ``check_rep``
+  jax.set_mesh    -> the Mesh object itself (Mesh is a context manager on
+                     0.4.x, so ``with jax.set_mesh(mesh):`` keeps working)
+  make_mesh(...)  -> drops ``axis_types`` when jax.make_mesh predates it
+
+Every module that touches these APIs imports repro.compat first.  The
+shims are no-ops on jax versions that already provide the real thing.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (modern jax)
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax <= 0.4.x
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with AxisType.Auto on every axis when supported."""
+    if HAS_AXIS_TYPE and _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def _shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                   check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+    jax.shard_map = _shard_map
+
+
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        # psum of a static literal is special-cased to the axis size at
+        # trace time — no collective is emitted.
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = _axis_size
+
+
+if not hasattr(jax, "set_mesh"):
+    def _set_mesh(mesh):
+        # 0.4.x Mesh is itself a context manager; entering it provides the
+        # resource env that modern ``jax.set_mesh`` would.
+        if hasattr(mesh, "__enter__"):
+            return mesh
+        return contextlib.nullcontext(mesh)
+
+    jax.set_mesh = _set_mesh

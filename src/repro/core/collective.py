@@ -1,183 +1,29 @@
-"""Gradient-synchronization collectives (inside shard_map).
+"""Gradient-synchronization collectives — moved to ``repro.collectives``.
 
-Three modes, selectable per training run (paper Fig. 6/7 comparison):
-
-  psum    — XLA-native all-reduce (reference).
-  ring    — faithful ring all-reduce: (N-1) reduce-scatter rounds +
-            (N-1) all-gather rounds via lax.ppermute (the paper's baseline,
-            with its 2(N-1)/N communication blow-up visible in the HLO).
-  optinc  — the paper's technique, TPU-adapted: PAM4-style block
-            quantization to B-bit integers *before* crossing the sync axes,
-            integer reduction (the ICI analogue of the optical in-network
-            sum), then the ONN behavioural transfer function
-            Q(mean) applied once (eq. 3), with optional Table-II error
-            injection and optional error feedback (beyond-paper).
-
-All functions assume they run inside shard_map and operate on gradient
-pytrees whose leaves are identical across the sync axes' peers.
+This module is the backwards-compatible import surface for the old
+per-leaf implementation that lived here.  The runtime is now the
+bucket-fused pluggable engine in ``repro.collectives`` (see that
+package's docstring and EXPERIMENTS.md §Fig6); ``sync_gradients`` keeps
+its historical signature, with the error-feedback residual now a single
+1-D f32 vector over the concatenated leaf space instead of a pytree.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from .encoding import QuantSpec, compute_scale
-from . import error_model
-
-
-@dataclasses.dataclass(frozen=True)
-class SyncConfig:
-    mode: str = "optinc"            # psum | ring | optinc
-    axes: tuple = ("data",)         # mesh axes to synchronize over
-    bits: int = 8                    # OptINC gradient bit width B
-    block: int = 2048                # quantization block size (0 = global)
-    error_layers: tuple = ()         # Table II key, () = ideal ONN
-    error_feedback: bool = False     # beyond-paper residual accumulation
+from ..collectives import (  # noqa: F401
+    SyncConfig, available_backends, get_backend, register_backend,
+    residual_size, sync_gradients)
+from ..collectives.backends import _ring_allreduce_flat
 
 
-def _axis_size(axes) -> int:
-    n = 1
-    for ax in axes:
-        n *= lax.axis_size(ax)
-    return n
-
-
-# ------------------------------ ring ------------------------------
-
-def _ring_allreduce_leaf(x: jnp.ndarray, axis: str) -> jnp.ndarray:
-    """Manual ring all-reduce of one leaf over one mesh axis: reduce-scatter
-    then all-gather, each via (N-1) ppermute rounds (paper Fig. 1)."""
-    n = lax.axis_size(axis)
-    if n == 1:
-        return x
-    idx = lax.axis_index(axis)
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % n
-    flat = jnp.pad(flat, (0, pad))
-    chunks = flat.reshape(n, -1)
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-
-    # Rounds are Python-unrolled so every ppermute appears in the HLO
-    # (static collective accounting sees all 2(N-1) rounds) and XLA can
-    # overlap consecutive rounds.
-    # Reduce-scatter: after round r, each device has accumulated chunk
-    # (idx - r - 1) mod n from its r+1 upstream neighbours.
-    for r in range(n - 1):
-        send_id = (idx - r) % n
-        recv_id = (idx - r - 1) % n
-        sent = lax.ppermute(chunks[send_id], axis, fwd)
-        chunks = chunks.at[recv_id].add(sent)
-
-    # All-gather: circulate the fully-reduced chunks.
-    for r in range(n - 1):
-        send_id = (idx + 1 - r) % n
-        recv_id = (idx - r) % n
-        sent = lax.ppermute(chunks[send_id], axis, fwd)
-        chunks = chunks.at[recv_id].set(sent)
-    out = chunks.reshape(-1)
-    return out[: x.size].reshape(x.shape)
-
-
-def ring_allreduce(tree, axes) -> object:
-    out = tree
-    for ax in axes:
-        out = jax.tree.map(lambda x: _ring_allreduce_leaf(x, ax), out)
-    return out
-
-
-# ----------------------------- optinc -----------------------------
-
-def _optinc_leaf(g: jnp.ndarray, cfg: SyncConfig, key: jax.Array | None):
-    """Quantize -> integer in-network sum -> Q(mean) -> dequantize."""
-    spec = QuantSpec(bits=cfg.bits, block=cfg.block)
-    n = _axis_size(cfg.axes)
-    g32 = g.astype(jnp.float32)
-    # Shared scale across peers ("global block quantization", paper IV —
-    # the <0.4% synchronization cost): max over the sync axes.
-    scale = compute_scale(g32, spec)
-    for ax in cfg.axes:
-        scale = lax.pmax(scale, ax)
-    # Offset-binary B-bit encode (what each server's transceivers emit).
-    blocks_shape = scale.shape[0]
-    flat = g32.reshape(-1)
-    pad = (-flat.size) % max(cfg.block, 1) if cfg.block > 0 else 0
-    flat = jnp.pad(flat, (0, pad)).reshape(blocks_shape, -1)
-    q = jnp.round(flat / scale[:, None] * spec.levels)
-    q = jnp.clip(q, -spec.levels, spec.levels).astype(jnp.int32)
-    u = q + spec.levels
-    # In-network computation: the optical sum. The TPU ICI analogue keeps
-    # the wire at symbol width: reduce-scatter the B-bit codes in the
-    # narrowest integer type that holds the N-way sum, apply the ONN
-    # transfer function Q(mean) on the scattered shard, and all-gather the
-    # B-bit result. Wire bytes: RS(int16) + AG(int8) = 3 B/elem vs the
-    # bf16 ring baseline's 2 x 2 B/elem (see EXPERIMENTS.md §Fig6).
-    max_sum = (2 ** cfg.bits - 2) * n
-    rs_dt = jnp.int16 if max_sum < 2 ** 15 else jnp.int32
-    sizes = [lax.axis_size(ax) for ax in cfg.axes]
-    group = 1
-    for s_ in sizes:
-        group *= s_
-    flat_u = u.reshape(-1)
-    pad_u = (-flat_u.size) % group
-    parts = jnp.pad(flat_u, (0, pad_u)).astype(rs_dt)
-    for ax in cfg.axes:
-        parts = lax.psum_scatter(parts, ax, scatter_dimension=0, tiled=True)
-    u_avg = jnp.round(parts.astype(jnp.float32) / n).astype(jnp.int32)
-    if cfg.error_layers and key is not None:
-        spec_err = error_model.TABLE_II[tuple(cfg.error_layers)]
-        u_avg = error_model.inject(key, u_avg, spec_err, cfg.bits)
-    ag_dt = jnp.uint8 if cfg.bits <= 8 else jnp.uint16
-    coded = u_avg.astype(ag_dt)
-    for ax in reversed(cfg.axes):
-        coded = lax.all_gather(coded, ax, axis=0, tiled=True)
-    u_avg = coded[: flat_u.size].astype(jnp.int32).reshape(u.shape)
-    deq = (u_avg.astype(jnp.float32) - spec.levels) * (scale[:, None] / spec.levels)
-    out = deq.reshape(-1)[: g.size].reshape(g.shape)
-    # local quantization error (for error feedback): what this server's
-    # transceiver lost when encoding its own gradient
-    local_deq = (q.astype(jnp.float32)) * (scale[:, None] / spec.levels)
-    local_err = g32 - local_deq.reshape(-1)[: g.size].reshape(g.shape)
-    return out.astype(g.dtype), local_err
-
-
-def optinc_allreduce(tree, cfg: SyncConfig, key: jax.Array | None = None):
-    leaves, treedef = jax.tree.flatten(tree)
-    keys = (jax.random.split(key, len(leaves)) if key is not None
-            else [None] * len(leaves))
-    pairs = [_optinc_leaf(g, cfg, k) for g, k in zip(leaves, keys)]
-    out = jax.tree.unflatten(treedef, [p[0] for p in pairs])
-    err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
-    return out, err
-
-
-# --------------------------- entry point ---------------------------
-
-def sync_gradients(grads, cfg: SyncConfig, key: jax.Array | None = None,
-                   residual=None):
-    """Synchronize (average) ``grads`` across cfg.axes.
-
-    Returns (synced_grads, new_residual). ``residual`` implements error
-    feedback (beyond-paper): the local quantization error is added back
-    into the next step's gradient before quantization.
-    """
-    n = _axis_size(cfg.axes)
-    if cfg.error_feedback and residual is not None:
-        grads = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, residual)
-    new_residual = None
-    if cfg.mode == "psum":
-        synced = jax.tree.map(
-            lambda g: lax.pmean(g, cfg.axes[0] if len(cfg.axes) == 1 else cfg.axes),
-            grads)
-    elif cfg.mode == "ring":
-        synced = jax.tree.map(lambda g: g / n, ring_allreduce(grads, cfg.axes))
-    elif cfg.mode == "optinc":
-        synced, local_err = optinc_allreduce(grads, cfg, key)
-        if cfg.error_feedback:
-            new_residual = local_err
-    else:
-        raise ValueError(f"unknown sync mode {cfg.mode!r}")
-    return synced, new_residual
+def ring_allreduce(tree, axes):
+    """Tree-wise manual ring all-reduce (sum) over ``axes`` — kept for the
+    pre-refactor API; the engine runs the fused-bucket equivalent."""
+    def leaf(x):
+        out = x.reshape(-1)
+        for ax in axes:
+            out = _ring_allreduce_flat(out, ax)
+        return out.reshape(x.shape)
+    return jax.tree.map(leaf, tree)

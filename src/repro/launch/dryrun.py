@@ -21,8 +21,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat  # noqa: F401  (jax API shims; after XLA_FLAGS)
 from repro import configs
-from repro.core.collective import SyncConfig
+from repro.collectives import SyncConfig, available_backends
 from repro.launch import roofline
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (make_ctx, make_decode_step, make_prefill_step,
@@ -61,7 +62,7 @@ def cache_sds(cfg, ctx, batch_local, max_seq):
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
                fsdp_opt: str = "auto", moment_dtype: str = "bfloat16",
                seq_shard_long: bool = True, seq_parallel: bool = False,
-               remat_groups: int = 0):
+               remat_groups: int = 0, bucket_bytes: int = 4 * 2 ** 20):
     cfg = configs.get(arch)
     cell = configs.cells(arch)[shape_name]
     if "skip" in cell:
@@ -75,8 +76,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
     t0 = time.time()
 
     if kind == "train":
+        if sync_mode == "cascade" and not multi_pod:
+            raise SystemExit("--sync cascade needs --multi-pod (a 'pod' "
+                             "level-2 axis)")
         sync = SyncConfig(mode=sync_mode,
-                          axes=("pod", "data") if multi_pod else ("data",))
+                          axes=("pod", "data") if multi_pod else ("data",),
+                          bucket_bytes=bucket_bytes)
         opt = AdamWConfig(moment_dtype=moment_dtype)
         step, _, _ = make_train_step(cfg, mesh, sync, opt, fsdp=fsdp,
                                      seq_parallel=seq_parallel,
@@ -85,7 +90,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
                        remat_groups=remat_groups)
         p_sds = lm.param_shape_dtype(cfg, ctx)
         mdt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
-        args = (p_sds, opt_sds(p_sds, mdt),
+        args = (p_sds, opt_sds(p_sds, mdt), {},
                 batch_sds(cfg, cell["seq_len"], cell["global_batch"]),
                 jax.eval_shape(lambda: jax.random.PRNGKey(0)))
     elif kind == "prefill":
@@ -178,7 +183,8 @@ def main():
     ap.add_argument("--shape", required=True, choices=list(configs.SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--sync", default="optinc",
-                    choices=["optinc", "ring", "psum"])
+                    choices=list(available_backends()))
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
     ap.add_argument("--moment-dtype", default="bfloat16")
     ap.add_argument("--seq-parallel", action="store_true")
@@ -190,7 +196,8 @@ def main():
     rec = lower_cell(args.arch, args.shape, args.multi_pod, args.sync,
                      args.fsdp, args.moment_dtype,
                      seq_parallel=args.seq_parallel,
-                     remat_groups=args.remat_groups)
+                     remat_groups=args.remat_groups,
+                     bucket_bytes=int(args.bucket_mb * 2 ** 20))
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     tag = (f"{args.arch}.{args.shape}."

@@ -2,28 +2,28 @@
 
 Single pod: 16 x 16 = 256 chips, axes (data, model).
 Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — 'pod' is the
-cross-pod data-parallel axis whose gradient synchronization OptINC targets.
+cross-pod data-parallel axis whose gradient synchronization OptINC targets
+(and the level-2 axis of the cascade sync mode).
 
 Functions, not module constants: importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before any jax import).
+jax-version differences (AxisType, jax.shard_map, jax.set_mesh) are
+absorbed by repro.compat.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from .. import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (smoke tests use (1, 1) or (2, 2))."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_axis_sizes(mesh) -> dict:

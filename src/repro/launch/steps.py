@@ -2,12 +2,21 @@
 
 This is where the paper's technique becomes a first-class runtime feature:
 ``make_train_step(..., sync)`` selects how the data-parallel gradient
-synchronization is executed — XLA psum, a faithful ring all-reduce, or the
-OptINC quantize->integer-reduce->Q(mean) collective (core.collective).
+synchronization is executed — any backend registered with the bucket-fused
+collective engine (repro.collectives): XLA psum, a faithful ring
+all-reduce, the OptINC quantize->integer-reduce->Q(mean) collective, or
+the two-level carry-cascade over a (pod, data) mesh.
 
 With FSDP, gradients of weight-sharded parameters are already
 reduce-scattered over 'data' by the all-gather transpose; the remaining
-explicit sync (and OptINC's target) is the cross-pod axis.
+explicit sync (and OptINC's target) is the cross-pod axis.  The
+replicated and FSDP-sharded leaf groups are bucketed separately so each
+group issues O(ceil(bytes / bucket_bytes)) collective launches per step.
+
+Error-feedback residuals are explicit step state: ``step`` takes and
+returns a ``sync_state`` dict ({} when feedback is off, otherwise
+device-local f32 residual vectors for the two leaf groups), so the
+quantization error genuinely carries across steps.
 """
 from __future__ import annotations
 
@@ -19,7 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..core.collective import SyncConfig, sync_gradients
+from .. import compat  # noqa: F401  (jax API shims)
+from ..collectives import SyncConfig, residual_size, sync_gradients
 from ..models import lm
 from ..models.config import ModelConfig
 from ..models.layers import ShardCtx
@@ -52,43 +62,121 @@ def _fsdp_leaf_tree(specs, ctx: ShardCtx):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, residual):
+def _group_sync(group, sync: SyncConfig, key, residual):
+    """Sync one leaf group through the bucketed engine, always returning a
+    residual vector of stable shape when error feedback is on (exact
+    backends yield no quantization error -> zeros)."""
+    if not group:
+        return [], (jnp.zeros((0,), jnp.float32) if sync.error_feedback
+                    else None)
+    synced, new_res = sync_gradients(group, sync, key, residual)
+    if sync.error_feedback and new_res is None:
+        new_res = jnp.zeros((residual_size(group),), jnp.float32)
+    return synced, new_res
+
+
+def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, sync_state):
     """Sync replicated-leaf grads over the full DP axes; FSDP-sharded leaf
-    grads only over the pod axis (and rescale the AD sum to a mean)."""
+    grads only over the pod axis (and rescale the AD sum to a mean).
+
+    Each group is fused into fixed-size buckets before the collective, so
+    the launch count is O(buckets), not O(leaves).  Returns
+    ``(synced_grads, new_sync_state)``; ``sync_state`` carries the two
+    groups' error-feedback residual vectors ({} when feedback is off).
+    """
     leaves, treedef = jax.tree.flatten(grads)
     masks = jax.tree.leaves(fsdp_mask)
-    res_leaves = (jax.tree.leaves(residual) if residual is not None
-                  else [None] * len(leaves))
     rep_axes = ctx.dp_axes
     pod_axes = (ctx.pod_axis,) if ctx.pods > 1 else ()
-    out, new_res = [], []
+    ef = sync.error_feedback
+    sync_state = sync_state or {}
+    k_rep = k_fs = None
+    if key is not None:
+        k_rep, k_fs = jax.random.split(key)
     rep_idx = [i for i, m in enumerate(masks) if not m]
-    # replicated leaves: the full OptINC/ring/psum sync
-    rep_tree = [leaves[i] for i in rep_idx]
-    rep_res = [res_leaves[i] for i in rep_idx]
-    rep_res = rep_res if residual is not None else None
-    synced_rep, res_rep = sync_gradients(
-        rep_tree, dataclasses.replace(sync, axes=rep_axes), key, rep_res)
-    # fsdp leaves: AD already summed over 'data' -> mean; sync pods
-    it = iter(synced_rep)
-    it_res = iter(res_rep) if res_rep is not None else None
-    for i, (g, m) in enumerate(zip(leaves, masks)):
-        if not m:
-            out.append(next(it))
-            new_res.append(next(it_res) if it_res is not None else None)
-            continue
-        g = g / ctx.dp
-        if pod_axes:
-            g_s, r_s = sync_gradients(
-                [g], dataclasses.replace(sync, axes=pod_axes), key, None)
-            g = g_s[0]
-        out.append(g)
-        new_res.append(jnp.zeros((1,), jnp.float32) if residual is not None
-                       else None)
+    fs_idx = [i for i, m in enumerate(masks) if m]
+    # replicated leaves: the full sync over (pod,) + data axes
+    synced_rep, rep_res = _group_sync(
+        [leaves[i] for i in rep_idx],
+        dataclasses.replace(sync, axes=rep_axes),
+        k_rep, sync_state.get("rep") if ef else None)
+    # fsdp leaves: AD already reduce-scattered (summed) over 'data' ->
+    # rescale to a mean, then sync the remaining cross-pod level.  That
+    # single level is exactly a one-level OptINC, so cascade mode (which
+    # needs two axes) degrades to optinc here.
+    fs = [leaves[i] / ctx.dp for i in fs_idx]
+    if pod_axes and fs:
+        pod_mode = "optinc" if sync.mode == "cascade" else sync.mode
+        synced_fs, fs_res = _group_sync(
+            fs, dataclasses.replace(sync, axes=pod_axes, mode=pod_mode),
+            k_fs, sync_state.get("fsdp") if ef else None)
+    else:
+        synced_fs = fs
+        fs_res = (jnp.zeros((residual_size(fs),), jnp.float32) if ef
+                  else None)
+    out = [None] * len(leaves)
+    for i, g in zip(rep_idx, synced_rep):
+        out[i] = g
+    for i, g in zip(fs_idx, synced_fs):
+        out[i] = g
     grads = jax.tree.unflatten(treedef, out)
-    res = (jax.tree.unflatten(treedef, new_res)
-           if residual is not None else None)
-    return grads, res
+    new_state = {"rep": rep_res, "fsdp": fs_res} if ef else {}
+    return grads, new_state
+
+
+def sync_state_specs(mesh, sync: SyncConfig):
+    """PartitionSpec tree for the error-feedback sync_state: each device
+    owns its own residual slice, so the vectors are sharded over EVERY
+    mesh axis along dim 0 ({} when feedback is off)."""
+    if not sync.error_feedback:
+        return {}
+    all_axes = tuple(mesh.axis_names)
+    return {"rep": P(all_axes), "fsdp": P(all_axes)}
+
+
+def _local_leaf_sizes(cfg: ModelConfig, ctx: ShardCtx, mesh):
+    """(sizes, masks): per-leaf LOCAL (inside-shard_map) element counts and
+    the fsdp mask, in flat_specs leaf order."""
+    specs = lm.flat_specs(cfg, ctx)
+    p_sds = lm.param_shape_dtype(cfg, ctx)
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    is_p = lambda x: isinstance(x, P)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=is_p)
+    sds_leaves = jax.tree.leaves(p_sds)
+    masks = jax.tree.leaves(_fsdp_leaf_tree(specs, ctx))
+    sizes = []
+    for sds, spec in zip(sds_leaves, spec_leaves):
+        n = int(sds.size)
+        for entry in spec:
+            for ax in ((entry,) if not isinstance(entry, tuple) else entry):
+                if ax is not None:
+                    n //= mesh_sizes[ax]
+        sizes.append(n)
+    return sizes, masks
+
+
+def init_sync_state(cfg: ModelConfig, mesh, sync: SyncConfig,
+                    fsdp: bool = False, error_feedback: bool = False,
+                    seq_parallel: bool = False, remat_groups: int = 0):
+    """Zero-initialized global sync_state matching ``sync_state_specs``.
+
+    Residuals are per-device local quantization error, so the global
+    arrays are (n_devices * local_group_size,) f32 vectors.  Not
+    checkpointed: a resumed run restarts feedback from zero residuals
+    (one step of extra quantization noise).  ``error_feedback`` merges
+    into ``sync`` exactly as in ``make_train_step`` so the two calls
+    always agree on the state structure.
+    """
+    if not (sync.error_feedback or error_feedback):
+        return {}
+    ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                   remat_groups=remat_groups)
+    sizes, masks = _local_leaf_sizes(cfg, ctx, mesh)
+    rep = sum(s for s, m in zip(sizes, masks) if not m)
+    fs = sum(s for s, m in zip(sizes, masks) if m)
+    ndev = int(mesh.devices.size)
+    return {"rep": jnp.zeros((ndev * rep,), jnp.float32),
+            "fsdp": jnp.zeros((ndev * fs,), jnp.float32)}
 
 
 def make_train_step(cfg: ModelConfig, mesh, sync: SyncConfig,
@@ -96,28 +184,38 @@ def make_train_step(cfg: ModelConfig, mesh, sync: SyncConfig,
                     error_feedback: bool = False,
                     seq_parallel: bool = False, remat_groups: int = 0):
     """Returns (step_fn, in_specs, out_specs). step_fn is shard_map'd but
-    NOT jit'd (callers jit / lower it)."""
+    NOT jit'd (callers jit / lower it).
+
+    step(params, opt_state, sync_state, batch, key) ->
+        (params, opt_state, sync_state, metrics)
+    where sync_state is {} unless error feedback is on (init_sync_state).
+    """
     assert not (seq_parallel and cfg.enc_dec), "SP not wired for enc-dec"
+    sync = dataclasses.replace(
+        sync, error_feedback=sync.error_feedback or error_feedback)
     ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
                    remat_groups=remat_groups)
     specs = lm.flat_specs(cfg, ctx)
     fsdp_mask = _fsdp_leaf_tree(specs, ctx)
     bspec = batch_specs(ctx, cfg)
+    sspec = sync_state_specs(mesh, sync)
 
-    def step(params, opt_state, batch, key):
+    def step(params, opt_state, sync_state, batch, key):
         def lf(p):
             return lm.loss_fn(cfg, ctx, p, batch)
         (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
-        grads, _ = _split_sync(grads, fsdp_mask, ctx, sync, key, None)
+        grads, sync_state = _split_sync(grads, fsdp_mask, ctx, sync, key,
+                                        sync_state)
         grads, gnorm = clip_by_global_norm(
             grads, opt.clip_norm, axis_names=(ctx.model_axis,))
         params, opt_state = adamw_update(opt, params, grads, opt_state)
         metrics = {"loss": lax.pmean(loss, ctx.dp_axes),
                    "grad_norm": gnorm}
-        return params, opt_state, metrics
+        return params, opt_state, sync_state, metrics
 
-    in_specs = (specs, opt_specs(specs), bspec, P())
-    out_specs = (specs, opt_specs(specs), {"loss": P(), "grad_norm": P()})
+    in_specs = (specs, opt_specs(specs), sspec, bspec, P())
+    out_specs = (specs, opt_specs(specs), sspec,
+                 {"loss": P(), "grad_norm": P()})
     fn = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn, in_specs, out_specs

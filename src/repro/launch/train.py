@@ -4,6 +4,11 @@
       --sync optinc --steps 200 --global-batch 32 --seq-len 512 \
       --ckpt-dir results/ckpt/paper_llama [--resume] [--error-layers 3,4,5,6]
 
+  # two-level carry-cascade over a (pod=2, data=2, model=1) mesh
+  # (requires >= 4 devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=4)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync cascade --mesh 2x1 --bucket-mb 4
+
 Fault tolerance:
   * SIGTERM/SIGINT force a final checkpoint before exit (preemption safe)
   * --resume restarts from the newest valid checkpoint (corrupt ones are
@@ -25,13 +30,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat  # noqa: F401  (jax API shims: set_mesh et al.)
 from repro import configs
 from repro.checkpoint import CheckpointManager, load_checkpoint
 from repro.checkpoint.ckpt import latest_step
-from repro.core.collective import SyncConfig
+from repro.collectives import SyncConfig, available_backends
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
-from repro.launch.steps import make_ctx, make_train_step, opt_specs
+from repro.launch.steps import (init_sync_state, make_ctx, make_train_step,
+                                opt_specs)
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init
 
@@ -42,7 +49,13 @@ def main(argv=None):
     ap.add_argument("--smoke-config", action="store_true",
                     help="use the arch's reduced SMOKE config")
     ap.add_argument("--sync", default="optinc",
-                    choices=["optinc", "ring", "psum"])
+                    choices=list(available_backends()))
+    ap.add_argument("--bucket-mb", type=float, default=4.0,
+                    help="fused gradient-bucket size in MiB (collective "
+                         "launches per step scale as total_bytes/bucket)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="pod (level-2) axis size; 0 = auto (2 for "
+                         "--sync cascade, else 1)")
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--error-layers", default="",
                     help="Table II key, e.g. '3,4,5,6' (injects ONN errors)")
@@ -61,12 +74,18 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((dp, tp), ("data", "model"))
+    pods = args.pods or (2 if args.sync == "cascade" else 1)
+    if pods > 1:
+        # cascade's level-2 axis: (pod, data, model) mesh
+        mesh = make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    else:
+        mesh = make_mesh((dp, tp), ("data", "model"))
     cfg = configs.get_smoke(args.arch) if args.smoke_config else configs.get(args.arch)
     err = tuple(int(x) for x in args.error_layers.split(",")) if args.error_layers else ()
     sync = SyncConfig(mode=args.sync, axes=("data",), bits=args.bits,
                       block=2048, error_layers=err,
-                      error_feedback=args.error_feedback)
+                      error_feedback=args.error_feedback,
+                      bucket_bytes=int(args.bucket_mb * 2 ** 20))
     opt_cfg = AdamWConfig(lr=args.lr)
     ctx = make_ctx(mesh)
 
@@ -87,7 +106,8 @@ def main(argv=None):
             print(f"resumed from step {s}", flush=True)
 
     step_fn, _, _ = make_train_step(cfg, mesh, sync, opt_cfg)
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    sync_state = init_sync_state(cfg, mesh, sync)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
     data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
                       global_batch=args.global_batch, seed=args.seed)
     ds = SyntheticLM(data)
@@ -109,7 +129,8 @@ def main(argv=None):
             t0 = time.time()
             batch = {"tokens": jnp.asarray(ds.batch(step))}
             key, sub = jax.random.split(key)
-            params, opt_state, metrics = jitted(params, opt_state, batch, sub)
+            params, opt_state, sync_state, metrics = jitted(
+                params, opt_state, sync_state, batch, sub)
             loss = float(metrics["loss"])
             dt = time.time() - t0
             times.append(dt)

@@ -35,8 +35,8 @@ def test_train_step_smoke(arch):
     opt_state = adamw_init(OPT, params)
     fn, _, _ = steps.make_train_step(cfg, MESH, SYNC, OPT)
     with jax.set_mesh(MESH):
-        p2, o2, m = jax.jit(fn)(params, opt_state, _batch(cfg),
-                                jax.random.PRNGKey(1))
+        p2, o2, _, m = jax.jit(fn)(params, opt_state, {}, _batch(cfg),
+                                   jax.random.PRNGKey(1))
     assert np.isfinite(float(m["loss"]))
     assert np.isfinite(float(m["grad_norm"]))
     # params actually changed (total movement across all leaves; single

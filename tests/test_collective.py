@@ -56,10 +56,9 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_collectives_multidevice():
+    from conftest import subprocess_env
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       text=True, timeout=600, env=subprocess_env())
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["ring_psum_max_diff"] < 1e-5

@@ -8,10 +8,11 @@ import pytest
 
 
 def run_train(args, timeout=900):
+    from conftest import subprocess_env
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.train"] + args,
         capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        env=subprocess_env())
     assert r.returncode == 0, r.stderr[-3000:]
     recs = [json.loads(l) for l in r.stdout.splitlines()
             if l.startswith("{")]
