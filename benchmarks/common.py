@@ -9,6 +9,8 @@ import sys
 import time
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+DRYRUN = RESULTS / "dryrun"     # shared with launch/dryrun.py --out and
+                                # scripts/fix_dryrun_stats.py --out
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -30,30 +30,24 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
 import json
 import jax, jax.numpy as jnp
-from repro import configs
-from repro.collectives import SyncConfig, expected_buckets
-from repro.launch.mesh import make_mesh
-from repro.launch.steps import make_ctx, make_train_step
+from repro.api import MeshSpec, RunSpec, SyncConfig, build
+from repro.api.shapes import batch_sds, opt_sds
+from repro.collectives import expected_buckets
 from repro.launch.roofline import parse_collectives
-from repro.launch.dryrun import batch_sds, opt_sds
 from repro.models import lm
-from repro.optim import AdamWConfig
 
-cfg = configs.get("paper_llama")
 out = {{}}
 p_sds = None
 for mode in {modes}:
-    if mode == "cascade":
-        mesh = make_mesh((2, {n} // 2, 1), ("pod", "data", "model"))
-        axes = ("pod", "data")
-    else:
-        mesh = make_mesh(({n}, 1), ("data", "model"))
-        axes = ("data",)
-    sync = SyncConfig(mode=mode, axes=axes, bits=8, block=2048,
-                      bucket_bytes={bucket_bytes})
-    step, _, _ = make_train_step(cfg, mesh, sync, AdamWConfig())
-    ctx = make_ctx(mesh)
-    p_sds = lm.param_shape_dtype(cfg, ctx)
+    mesh_spec = (MeshSpec(pods=2, dp={n} // 2, tp=1) if mode == "cascade"
+                 else MeshSpec(dp={n}, tp=1))
+    spec = RunSpec(arch="paper_llama", mesh=mesh_spec,
+                   sync=SyncConfig(mode=mode, bits=8, block=2048,
+                                   bucket_bytes={bucket_bytes}))
+    cfg = spec.model_config()
+    mesh = spec.mesh.build()
+    step, _, _ = build.build_train_step(spec, cfg, mesh)
+    p_sds = lm.param_shape_dtype(cfg, spec.mesh.ctx())
     args = (p_sds, opt_sds(p_sds), {{}}, batch_sds(cfg, 512, {n}),
             jax.eval_shape(lambda: jax.random.PRNGKey(0)))
     with jax.set_mesh(mesh):

@@ -6,7 +6,7 @@ import json
 from repro import configs
 from repro.launch.roofline import PEAK_FLOPS
 
-from .common import RESULTS, emit
+from .common import DRYRUN, emit
 
 
 def model_flops(arch: str, tokens: int) -> float:
@@ -16,7 +16,7 @@ def model_flops(arch: str, tokens: int) -> float:
 
 
 def main(full: bool = False):
-    rows = sorted((RESULTS / "dryrun").glob("*.json"))
+    rows = sorted(DRYRUN.glob("*.json"))
     for p in rows:
         rec = json.loads(p.read_text())
         tag = p.stem

@@ -1,31 +1,61 @@
-"""Quickstart: the OptINC pipeline end-to-end on one small scenario.
+"""Quickstart for the ``repro.api`` surface (and the paper's ONN pipeline).
 
-  PYTHONPATH=src python examples/quickstart.py [--scenario1]
+  PYTHONPATH=src python examples/quickstart.py [--steps 3] [--arch minitron_4b]
+  PYTHONPATH=src python examples/quickstart.py --onn [--scenario1]
 
-1. N servers quantize + PAM4-encode their gradients (paper eq. 2).
-2. The preprocessing unit P merges symbols and averages across servers.
-3. An ONN f_theta is trained (hardware-aware, matrix-approximated, eq. 4-7)
-   to emit the PAM4 symbols of the quantized average (eq. 3).
-4. The trained ONN is programmed onto MZI meshes (Givens decomposition) and
-   the optical forward pass is verified against the software model.
-5. Area cost with/without matrix approximation is reported (Table I).
+Default mode — the declarative API end-to-end on one small scenario:
+1. Describe the whole run as a frozen, JSON-round-trippable RunSpec
+   (model x mesh x sync backend x optimizer x data x checkpointing).
+2. TrainSession runs a few OptINC-synced training steps (JSONL metrics,
+   checkpointing and straggler watchdog are callbacks, not loop code).
+3. ServeSession reuses the trained params for greedy decoding through the
+   same serving path the dry-run cells lower.
 
-Default: a 2-server B=4 scenario that trains to 100% in ~1 minute on CPU.
---scenario1 runs the paper's first Table-I scenario (B=8, N=4, 13^4
-samples; ~30-50 min on this container's single core).
+--onn runs the paper's core optical pipeline instead (quantize ->
+PAM4-encode -> train the hardware-aware ONN -> program MZI meshes ->
+area costs; eq. 2-8, Table I).  --scenario1 uses the paper's first
+Table-I scenario (B=8, N=4, 13^4 samples; ~30-50 min on one core).
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
 
-from repro.core import area, dataset, encoding, onn, training
-from repro.core.onn import ONNConfig
+def run_api(args):
+    import numpy as np
+
+    from repro.api import (AdamWConfig, DataConfig, RunSpec, ServeSession,
+                           SyncConfig, TrainSession)
+
+    spec = RunSpec(
+        arch=args.arch, smoke=True, steps=args.steps,
+        sync=SyncConfig(mode="optinc", bits=8, block=2048),
+        optim=AdamWConfig(lr=1e-3),
+        data=DataConfig(vocab=0, seq_len=64, global_batch=4, seed=0))
+    print("RunSpec (JSON round-trippable — save it, sweep it, resume it):")
+    print(spec.to_json())
+
+    print(f"\n--- TrainSession: {spec.steps} OptINC-synced steps ---")
+    session = TrainSession(spec)
+    history = session.run()
+    print(f"loss {history[0]['loss']} -> {history[-1]['loss']}")
+
+    print("\n--- ServeSession: greedy decode with the trained params ---")
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, session.cfg.vocab, (2, 8))
+    gen = ServeSession(spec, params=session.params).generate(
+        prompts, gen_len=8, max_seq=32)
+    print("generated ids[0]:", np.asarray(gen[0]).tolist())
 
 
-def main():
-    if "--scenario1" in sys.argv:
+def run_onn(scenario1: bool):
+    import numpy as np
+
+    from repro.core import area, dataset, encoding, onn, training
+    from repro.core.onn import ONNConfig
+
+    if scenario1:
         cfg = ONNConfig(structure=(4, 64, 128, 256, 128, 64, 4),
                         approx_layers=(1, 2, 3, 4, 5, 6),
                         bits=8, n_servers=4, k_inputs=4)
@@ -67,6 +97,23 @@ def main():
     ratio = area.area_ratio(list(cfg.structure), set(cfg.approx_layers))
     print(f"area ratio with matrix approximation: {ratio:.3f} "
           f"({area.area_mzis(list(cfg.structure), set(cfg.approx_layers))} MZIs)")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--onn", action="store_true",
+                    help="run the paper's core ONN pipeline demo")
+    ap.add_argument("--scenario1", action="store_true",
+                    help="paper Table-I scenario 1 (implies --onn; slow)")
+    ap.add_argument("--arch", default="minitron_4b")
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+    if args.onn or args.scenario1:
+        run_onn(args.scenario1)
+    else:
+        run_api(args)
 
 
 if __name__ == "__main__":

@@ -1,69 +1,61 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-the KV cache through the shard_map serving path (the same code the
-decode_32k / long_500k dry-run cells lower).
+"""Batched serving example — a thin client of ``repro.api.ServeSession``:
+prefill a batch of prompts, then greedy-decode with the KV cache through
+the shard_map serving path (the same programs the decode_32k / long_500k
+dry-run cells lower).
 
-  PYTHONPATH=src python examples/serve_decode.py [--arch minitron_4b]
+  PYTHONPATH=src python examples/serve_decode.py [--arch minitron_4b] \
+      [--prompt-len 24] [--gen-len 16] [--batch 4] [--ckpt-dir DIR]
+
+With --ckpt-dir the session serves the newest checkpointed params of a
+trained run instead of a fresh init.
 """
+import argparse
 import sys
+import time
 
 sys.path.insert(0, "src")
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.launch import steps
-from repro.launch.mesh import make_mesh
-from repro.models import lm
+from repro.api import CheckpointConfig, RunSpec, ServeSession
 
 
 def main():
-    arch = "minitron_4b"
-    if "--arch" in sys.argv:
-        arch = sys.argv[sys.argv.index("--arch") + 1]
-    cfg = configs.get_smoke(arch)
-    mesh = make_mesh((1, 1), ("data", "model"))
-    ctx = steps.make_ctx(mesh)
-    params = lm.init_params(cfg, ctx, jax.random.PRNGKey(0))
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", default="minitron_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="serve the newest checkpoint from this run")
+    args = ap.parse_args()
 
-    batch, prompt_len, gen_len, max_seq = 4, 24, 16, 64
+    spec = RunSpec(arch=args.arch, smoke=True,
+                   ckpt=CheckpointConfig(dir=args.ckpt_dir,
+                                         resume=bool(args.ckpt_dir)))
+    session = ServeSession(spec)
+    cfg = session.cfg
+
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)))
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
 
-    pre, _, _ = steps.make_prefill_step(cfg, mesh)
-    dec, _, _ = steps.make_decode_step(cfg, mesh)
-    pre_j, dec_j = jax.jit(pre), jax.jit(dec, donate_argnums=(1,))
+    t0 = time.time()
+    enc = (jnp.full((args.batch, cfg.enc_frames, cfg.d_model), 0.1,
+                    jnp.float32) if cfg.enc_dec else None)
+    logits, _ = session.prefill(prompts, enc_frames=enc)
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time() - t0:.2f}s "
+          f"logits {logits.shape}")
 
-    with jax.set_mesh(mesh):
-        t0 = time.time()
-        feed = {"tokens": prompts}
-        if cfg.enc_dec:
-            feed["enc_frames"] = jnp.full((batch, cfg.enc_frames, cfg.d_model),
-                                          0.1, jnp.float32)
-        logits, _ = pre_j(params, feed)
-        print(f"prefill {batch}x{prompt_len}: {time.time() - t0:.2f}s "
-              f"logits {logits.shape}")
-
-        # fresh cache sized for the full generation, replay the prompt
-        cache = lm.init_cache(cfg, ctx, batch, max_seq)
-        for i in range(prompt_len):
-            logits, cache = dec_j(params, cache, prompts[:, i:i + 1],
-                                  jnp.int32(i))
-        tok = jnp.argmax(logits[:, :cfg.vocab], -1)[:, None]
-        out = [tok]
-        t0 = time.time()
-        for i in range(gen_len - 1):
-            logits, cache = dec_j(params, cache, tok,
-                                  jnp.int32(prompt_len + i))
-            tok = jnp.argmax(logits[:, :cfg.vocab], -1)[:, None]
-            out.append(tok)
-        dt = time.time() - t0
-        gen = jnp.concatenate(out, axis=1)
-    print(f"decoded {gen_len} tokens x {batch} seqs in {dt:.2f}s "
-          f"({batch * gen_len / dt:.1f} tok/s on 1 CPU core)")
+    max_seq = args.prompt_len + args.gen_len + 24  # headroom for the cache
+    t0 = time.time()
+    gen = session.generate(prompts, args.gen_len, max_seq=max_seq)
+    dt = time.time() - t0
+    print(f"decoded {args.gen_len} tokens x {args.batch} seqs in {dt:.2f}s "
+          f"({args.batch * args.gen_len / dt:.1f} tok/s on 1 CPU core)")
     print("generated ids[0]:", np.asarray(gen[0]).tolist())
 
 

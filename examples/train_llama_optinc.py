@@ -11,7 +11,10 @@ batch 8, 40 steps. --full-scale uses the paper's shapes (seq 1024,
 batch 32, 300+ steps) — run it on real hardware.
 
 Fault tolerance included: checkpoints to results/ckpt/example every 20
-steps; re-run with the same args after killing the process and it resumes.
+steps (params + optimizer + error-feedback residuals); re-run with the
+same args after killing the process and it resumes bit-exactly.  This is
+a thin client: the flags below are RunSpec overrides handled by
+repro.api (RunSpec.from_args -> TrainSession).
 """
 import sys
 

@@ -1,23 +1,55 @@
 """One-shot fixup: early sweep records divided per-device stats by chips;
-multiply back and recompute roofline terms (idempotent via raw_stats flag)."""
-import json, pathlib, sys
-sys.path.insert(0, "src")
-from repro.launch import roofline
+multiply back and recompute roofline terms (idempotent via raw_stats flag).
 
-for p in pathlib.Path("results/dryrun").glob("*.json"):
-    r = json.loads(p.read_text())
-    if r.get("skipped") or r.get("raw_stats"):
-        continue
-    c = r["chips"]
-    r["flops_per_device"] = r["flops_per_device"] * c
-    r["bytes_per_device"] = r["bytes_per_device"] * c
-    for k in ("argument_bytes", "output_bytes", "temp_bytes", "alias_bytes",
-              "peak_bytes"):
-        if r["memory"].get(k) is not None:
-            r["memory"][k] = r["memory"][k] * c
-    r["roofline"] = roofline.roofline_terms(
-        r["flops_per_device"], r["bytes_per_device"],
-        r["collective_wire_bytes"], c)
-    r["raw_stats"] = True
-    p.write_text(json.dumps(r, indent=1))
-print("fixed")
+  python scripts/fix_dryrun_stats.py [--out results/dryrun]
+
+--out defaults to the benchmarks' shared results root (benchmarks.common
+.DRYRUN), the same directory launch/dryrun.py writes to.
+"""
+import argparse
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))        # benchmarks.common
+sys.path.insert(0, str(_ROOT / "src"))  # repro
+
+import json  # noqa: E402
+
+from benchmarks.common import DRYRUN  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--out", default=str(DRYRUN),
+                    help="dry-run results directory to fix in place "
+                         f"(default: {DRYRUN})")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    fixed = skipped = 0
+    for p in sorted(out.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped") or r.get("raw_stats"):
+            skipped += 1
+            continue
+        c = r["chips"]
+        r["flops_per_device"] = r["flops_per_device"] * c
+        r["bytes_per_device"] = r["bytes_per_device"] * c
+        for k in ("argument_bytes", "output_bytes", "temp_bytes",
+                  "alias_bytes", "peak_bytes"):
+            if r["memory"].get(k) is not None:
+                r["memory"][k] = r["memory"][k] * c
+        r["roofline"] = roofline.roofline_terms(
+            r["flops_per_device"], r["bytes_per_device"],
+            r["collective_wire_bytes"], c)
+        r["raw_stats"] = True
+        p.write_text(json.dumps(r, indent=1))
+        fixed += 1
+    print(f"fixed {fixed} record(s) in {out} ({skipped} already raw/skipped)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""repro.api — the declarative entry-point layer.
+
+  RunSpec / MeshSpec / CheckpointConfig  (spec.py)  : describe a scenario
+  TrainSession                           (session.py): run it
+  ServeSession                           (serve.py) : serve it
+  build_* / *_sds helpers          (build.py, shapes.py): lower it
+
+``launch/train.py``, ``launch/dryrun.py``, the examples, and the benchmark
+harnesses are thin clients of this package; see README.md for the
+quickstart and the scenario matrix.
+"""
+from ..collectives import SyncConfig
+from ..data import DataConfig
+from ..optim import AdamWConfig
+from .build import (build_decode_step, build_prefill_step, build_train_step,
+                    decode_cache_specs, init_sync_state, param_specs,
+                    sync_state_specs)
+from .callbacks import (Callback, JsonlLogger, PeriodicCheckpoint,
+                        SigtermHandler, StragglerWatchdog, default_callbacks)
+from .serve import ServeSession
+from .session import TrainSession
+from .spec import (CheckpointConfig, MeshSpec, RunSpec, SpecError,
+                   SpecMismatchError, validate_resume_compat)
+
+__all__ = [
+    "RunSpec", "MeshSpec", "CheckpointConfig", "SyncConfig", "AdamWConfig",
+    "DataConfig", "SpecError", "SpecMismatchError", "validate_resume_compat",
+    "TrainSession", "ServeSession",
+    "Callback", "JsonlLogger", "PeriodicCheckpoint", "SigtermHandler",
+    "StragglerWatchdog", "default_callbacks",
+    "build_train_step", "build_prefill_step", "build_decode_step",
+    "init_sync_state", "sync_state_specs", "decode_cache_specs",
+    "param_specs",
+]

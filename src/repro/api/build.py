@@ -1,0 +1,77 @@
+"""Spec -> step-builder bridge.
+
+The only module that hands the MeshSpec parallelism fields
+(fsdp / seq_parallel / remat_groups) to ``repro.launch.steps``, so the
+train step, the sync-state initializer, and the serving steps can never
+disagree on the state structure.  TrainSession, ServeSession, the dry-run,
+and the benchmark harnesses all build their shard_map programs here.
+"""
+from __future__ import annotations
+
+from ..launch import steps
+from .spec import RunSpec
+
+
+def _parts(spec: RunSpec, cfg, mesh):
+    cfg = cfg if cfg is not None else spec.model_config()
+    mesh = mesh if mesh is not None else spec.mesh.build()
+    return cfg, mesh
+
+
+def build_train_step(spec: RunSpec, cfg=None, mesh=None):
+    """(step_fn, in_specs, out_specs) for spec's training scenario.
+    step(params, opt_state, sync_state, batch, key) — shard_map'd, not
+    jit'd (callers jit / lower)."""
+    cfg, mesh = _parts(spec, cfg, mesh)
+    m = spec.mesh
+    return steps.make_train_step(
+        cfg, mesh, spec.resolved_sync(), spec.optim, fsdp=m.fsdp,
+        seq_parallel=m.seq_parallel, remat_groups=m.remat_groups)
+
+
+def init_sync_state(spec: RunSpec, cfg=None, mesh=None):
+    """Zero sync_state matching build_train_step's expectations ({} when
+    error feedback is off)."""
+    cfg, mesh = _parts(spec, cfg, mesh)
+    m = spec.mesh
+    return steps.init_sync_state(
+        cfg, mesh, spec.resolved_sync(), fsdp=m.fsdp,
+        seq_parallel=m.seq_parallel, remat_groups=m.remat_groups)
+
+
+def sync_state_specs(spec: RunSpec, mesh=None):
+    mesh = mesh if mesh is not None else spec.mesh.build()
+    return steps.sync_state_specs(mesh, spec.resolved_sync())
+
+
+def build_prefill_step(spec: RunSpec, cfg=None, mesh=None):
+    cfg, mesh = _parts(spec, cfg, mesh)
+    m = spec.mesh
+    return steps.make_prefill_step(cfg, mesh, fsdp=m.fsdp,
+                                   seq_parallel=m.seq_parallel,
+                                   remat_groups=m.remat_groups)
+
+
+def build_decode_step(spec: RunSpec, cfg=None, mesh=None, *,
+                      seq_shard_cache: bool = False,
+                      batch_shardable: bool = True):
+    cfg, mesh = _parts(spec, cfg, mesh)
+    return steps.make_decode_step(cfg, mesh, fsdp=spec.mesh.fsdp,
+                                  seq_shard_cache=seq_shard_cache,
+                                  batch_shardable=batch_shardable)
+
+
+def decode_cache_specs(spec: RunSpec, cfg=None, *,
+                       seq_shard_cache: bool = False,
+                       batch_shardable: bool = True):
+    cfg = cfg if cfg is not None else spec.model_config()
+    ctx = spec.mesh.ctx(seq_shard_cache=seq_shard_cache)
+    return steps.cache_specs(cfg, ctx, batch_shardable=batch_shardable)
+
+
+def param_specs(spec: RunSpec, cfg=None):
+    """(flat param PartitionSpecs, matching optimizer-state specs)."""
+    from ..models import lm
+    cfg = cfg if cfg is not None else spec.model_config()
+    p = lm.flat_specs(cfg, spec.mesh.ctx())
+    return p, steps.opt_specs(p)

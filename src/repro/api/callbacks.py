@@ -1,0 +1,137 @@
+"""TrainSession hook protocol + the built-in callbacks.
+
+What used to be inline loop code in ``launch/train.py`` (JSONL logging,
+periodic checkpointing, SIGTERM-safe final save, straggler watchdog) is
+now a small callback stack; a scenario adds behavior by appending a
+callback, not by forking the driver.
+
+Hooks (all optional — subclass and override what you need):
+
+  on_train_start(session)
+  on_step_end(session, record)   # record: mutable per-step dict; callbacks
+                                 # may read/annotate it (step, loss, time_s)
+  on_train_end(session)
+
+``session.request_stop()`` ends the loop after the current step;
+PeriodicCheckpoint treats a requested stop like a final step, so a
+SIGTERM'd run always leaves a fresh checkpoint behind.
+"""
+from __future__ import annotations
+
+import json
+import signal
+import statistics
+
+
+class Callback:
+    def on_train_start(self, session):
+        pass
+
+    def on_step_end(self, session, record: dict):
+        pass
+
+    def on_train_end(self, session):
+        pass
+
+
+class StragglerWatchdog(Callback):
+    """Annotates records whose step time exceeds ``factor`` x the rolling
+    median (straggler detection; keep this BEFORE the logger)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50, warmup: int = 10):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self.times = []
+
+    def on_step_end(self, session, record):
+        dt = record.get("time_s", 0.0)
+        self.times.append(dt)
+        med = statistics.median(self.times[-self.window:])
+        if len(self.times) > self.warmup and dt > self.factor * med:
+            record["straggler"] = True
+
+
+class JsonlLogger(Callback):
+    """One JSON line per step to stdout and (optionally) a file."""
+
+    def __init__(self, path: str = "", echo: bool = True):
+        self.path = path
+        self.echo = echo
+        self._f = None
+
+    def on_train_start(self, session):
+        if self.path:
+            self._f = open(self.path, "a")
+
+    def on_step_end(self, session, record):
+        line = json.dumps(record)
+        if self.echo:
+            print(line, flush=True)
+        if self._f:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def on_train_end(self, session):
+        if self._f:
+            self._f.close()
+            self._f = None
+
+
+class PeriodicCheckpoint(Callback):
+    """Save every N steps, on a requested stop, and at the end of every
+    run() call (so a partial ``run(n_steps)`` never loses its state)."""
+
+    def __init__(self, every: int = 50):
+        self.every = max(1, every)
+        self._last_run = None
+        self._last_saved = None
+
+    def on_train_start(self, session):
+        self._last_run = None
+
+    def on_step_end(self, session, record):
+        step = record["step"]
+        self._last_run = step
+        if session.mgr and ((step + 1) % self.every == 0
+                            or session.stop_requested
+                            or step == session.spec.steps - 1):
+            session.save_checkpoint(step)
+            self._last_saved = step
+
+    def on_train_end(self, session):
+        if session.mgr:
+            if self._last_run is not None and self._last_saved != self._last_run:
+                session.save_checkpoint(self._last_run)
+                self._last_saved = self._last_run
+            session.mgr.wait()
+
+
+class SigtermHandler(Callback):
+    """SIGTERM/SIGINT request a stop (and thus a final checkpoint) instead
+    of killing the loop mid-step — preemption safe.  Handlers are restored
+    on train end."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.signals = signals
+        self._previous = {}
+
+    def on_train_start(self, session):
+        def handler(sig, frame):
+            print(f"signal {sig}: checkpointing and exiting", flush=True)
+            session.request_stop()
+        for s in self.signals:
+            self._previous[s] = signal.signal(s, handler)
+
+    def on_train_end(self, session):
+        for s, prev in self._previous.items():
+            signal.signal(s, prev)
+        self._previous = {}
+
+
+def default_callbacks(spec) -> list:
+    """The train.py-equivalent stack for a RunSpec."""
+    return [StragglerWatchdog(spec.watchdog),
+            JsonlLogger(spec.log),
+            PeriodicCheckpoint(spec.ckpt.every),
+            SigtermHandler()]

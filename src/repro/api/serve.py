@@ -1,0 +1,99 @@
+"""ServeSession: prefill + decode + KV-cache management behind one object.
+
+``examples/serve_decode.py`` and the dry-run decode cells previously each
+re-derived mesh/ShardCtx and wired the serving steps by hand; both now go
+through ``repro.api.build`` — ServeSession is the *runtime* face of that
+shared path (real arrays, greedy generation), the dry-run is the
+*lowering* face (abstract shapes).
+
+Parameters come from (in order of precedence): the ``params`` argument,
+the spec's checkpoint directory when ``ckpt.resume`` is set (serve a
+trained run), or a fresh seeded init.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import compat  # noqa: F401  (jax API shims)
+from ..checkpoint import load_checkpoint
+from ..checkpoint.ckpt import latest_step
+from ..models import lm
+from . import build
+from .spec import RunSpec
+
+
+class ServeSession:
+    def __init__(self, spec: RunSpec, params=None, *,
+                 seq_shard_cache: bool = False, batch_shardable: bool = True):
+        spec.validate()
+        self.spec = spec
+        self.cfg = spec.model_config()
+        self.mesh = spec.mesh.build()
+        self.ctx = spec.mesh.ctx(seq_shard_cache=seq_shard_cache)
+        self.params = (params if params is not None
+                       else self._init_or_load_params())
+        pre, _, _ = build.build_prefill_step(spec, self.cfg, self.mesh)
+        dec, _, _ = build.build_decode_step(
+            spec, self.cfg, self.mesh, seq_shard_cache=seq_shard_cache,
+            batch_shardable=batch_shardable)
+        self._prefill = jax.jit(pre)
+        self._decode = jax.jit(dec, donate_argnums=(1,))
+
+    def _init_or_load_params(self):
+        c = self.spec.ckpt
+        step = latest_step(c.dir) if (c.dir and c.resume) else None
+        if step is None:
+            return lm.init_params(self.cfg, self.ctx,
+                                  jax.random.PRNGKey(self.spec.seed))
+        # load_checkpoint only reads the template's structure and dtypes —
+        # an eval_shape template skips materializing a throwaway init
+        template = jax.eval_shape(
+            lambda: lm.init_params(self.cfg, self.ctx, jax.random.PRNGKey(0)))
+        p_specs, _ = build.param_specs(self.spec, self.cfg)
+        tree, _ = load_checkpoint(c.dir, step, {"params": template},
+                                  mesh=self.mesh, specs={"params": p_specs})
+        print(f"serving params from checkpoint step {step}", flush=True)
+        return tree["params"]
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, tokens, enc_frames=None):
+        """(logits_at_last_position, prefill_cache) for a prompt batch."""
+        feed = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.enc_dec:
+            feed["enc_frames"] = enc_frames
+        with jax.set_mesh(self.mesh):
+            return self._prefill(self.params, feed)
+
+    def new_cache(self, batch: int, max_seq: int):
+        with jax.set_mesh(self.mesh):
+            return lm.init_cache(self.cfg, self.ctx, batch, max_seq)
+
+    def decode(self, cache, token, pos: int):
+        """One decode step; the cache argument is donated."""
+        with jax.set_mesh(self.mesh):
+            return self._decode(self.params, cache, token, jnp.int32(pos))
+
+    def generate(self, prompts, gen_len: int, max_seq: int | None = None):
+        """Greedy decode: replay the prompt through the decode path (same
+        cache layout the dry-run cells lower), then sample argmax tokens.
+        Returns (batch, gen_len) int token ids."""
+        prompts = jnp.asarray(prompts)
+        batch, prompt_len = prompts.shape
+        max_seq = max_seq or prompt_len + gen_len
+        assert max_seq >= prompt_len + gen_len, (max_seq, prompt_len, gen_len)
+        cache = self.new_cache(batch, max_seq)
+        with jax.set_mesh(self.mesh):
+            logits = None
+            for i in range(prompt_len):
+                logits, cache = self._decode(self.params, cache,
+                                             prompts[:, i:i + 1], jnp.int32(i))
+            out = []
+            tok = jnp.argmax(logits[:, :self.cfg.vocab], -1)[:, None]
+            out.append(tok)
+            for i in range(gen_len - 1):
+                logits, cache = self._decode(self.params, cache, tok,
+                                             jnp.int32(prompt_len + i))
+                tok = jnp.argmax(logits[:, :self.cfg.vocab], -1)[:, None]
+                out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,145 @@
+"""TrainSession: build -> init-or-resume -> jitted step loop.
+
+Owns everything the old ``launch/train.py`` wired by hand: mesh/ShardCtx
+derivation (via MeshSpec), parameter/optimizer/sync-state initialization,
+checkpoint resume with RunSpec compatibility validation, the jitted
+shard_map step, and a callback stack for logging / checkpointing /
+signal handling / straggler detection.
+
+Checkpoints persist the full step state — params, optimizer moments, AND
+the error-feedback ``sync_state`` residuals (with their sharding specs) —
+plus the RunSpec itself in the manifest, so ``--resume`` restores a run
+bit-exactly and refuses specs whose state structure doesn't match.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .. import compat  # noqa: F401  (jax API shims: set_mesh et al.)
+from ..checkpoint import CheckpointManager, load_checkpoint
+from ..checkpoint.ckpt import latest_step, read_manifest
+from ..data import SyntheticLM
+from ..models import lm
+from ..optim import adamw_init
+from . import build
+from .callbacks import default_callbacks
+from .spec import RunSpec, validate_resume_compat
+
+
+class TrainSession:
+    """One training run of one RunSpec.
+
+    >>> spec = RunSpec(arch="minitron_4b", smoke=True, steps=3)
+    >>> session = TrainSession(spec)
+    >>> history = session.run()          # list of per-step record dicts
+    """
+
+    def __init__(self, spec: RunSpec, callbacks: list | None = None):
+        spec.validate()
+        self.spec = spec
+        self.cfg = spec.model_config()
+        self.mesh = spec.mesh.build()
+        self.ctx = spec.mesh.ctx()
+        self.sync = spec.resolved_sync()
+        self.callbacks = (list(callbacks) if callbacks is not None
+                          else default_callbacks(spec))
+        self.mgr = (CheckpointManager(spec.ckpt.dir, keep=spec.ckpt.keep)
+                    if spec.ckpt.dir else None)
+        self.data = SyntheticLM(spec.resolved_data())
+        self.stop_requested = False
+        self.step = 0              # next step to execute
+        self.last_record = None
+
+        self.params = lm.init_params(self.cfg, self.ctx,
+                                     jax.random.PRNGKey(spec.seed))
+        self.opt_state = adamw_init(spec.optim, self.params)
+        self.sync_state = build.init_sync_state(spec, self.cfg, self.mesh)
+        if spec.ckpt.resume:
+            self._maybe_resume()
+
+        step_fn, _, _ = build.build_train_step(spec, self.cfg, self.mesh)
+        self._jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        # per-step keys are folded from a base key, NOT split sequentially,
+        # so a resumed step sees exactly the key the uninterrupted run saw
+        self._base_key = jax.random.PRNGKey(spec.seed + 1)
+
+    # ------------------------------------------------------------ control
+    def request_stop(self):
+        """End the loop after the current step (checkpoint included)."""
+        self.stop_requested = True
+
+    def save_checkpoint(self, step: int | None = None):
+        """Persist params + optimizer + sync_state + the RunSpec manifest."""
+        if self.mgr is None:
+            return
+        step = (self.step - 1) if step is None else step
+        self.mgr.save(step, self.params, self.opt_state,
+                      sync_state=self.sync_state,
+                      extra={"run_spec": self.spec.to_json_dict(),
+                             "arch": self.cfg.name, "sync": self.sync.mode})
+
+    def _maybe_resume(self):
+        c = self.spec.ckpt
+        s = latest_step(c.dir)
+        if s is None:
+            return
+        man = read_manifest(c.dir, s)
+        saved_spec = (man.get("extra") or {}).get("run_spec")
+        if saved_spec is not None:
+            validate_resume_compat(RunSpec.from_json_dict(saved_spec),
+                                   self.spec)
+        p_specs, o_specs = build.param_specs(self.spec, self.cfg)
+        template = {"params": self.params, "opt": self.opt_state}
+        specs = {"params": p_specs, "opt": o_specs}
+        has_sync = any(p.split("/", 1)[0] == "sync" for p in man["leaves"])
+        if self.sync_state and has_sync:
+            template["sync"] = self.sync_state
+            specs["sync"] = build.sync_state_specs(self.spec, self.mesh)
+        elif self.sync_state:
+            print("checkpoint predates sync_state persistence; "
+                  "error-feedback residuals restart from zero", flush=True)
+        tree, _ = load_checkpoint(c.dir, s, template, mesh=self.mesh,
+                                  specs=specs)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        if "sync" in tree:
+            self.sync_state = tree["sync"]
+        self.step = s + 1
+        print(f"resumed from step {s}", flush=True)
+
+    # ------------------------------------------------------------ the loop
+    def run_step(self, step: int) -> dict:
+        """Execute one training step (caller holds the mesh context)."""
+        t0 = time.time()
+        batch = {"tokens": jnp.asarray(self.data.batch(step))}
+        key = jax.random.fold_in(self._base_key, step)
+        (self.params, self.opt_state, self.sync_state,
+         metrics) = self._jitted(self.params, self.opt_state,
+                                 self.sync_state, batch, key)
+        loss = float(metrics["loss"])
+        return {"step": step, "loss": round(loss, 5),
+                "time_s": round(time.time() - t0, 3)}
+
+    def run(self, n_steps: int | None = None) -> list:
+        """Run to ``spec.steps`` (or ``n_steps`` more), firing callbacks.
+        Returns the per-step records."""
+        end = (self.spec.steps if n_steps is None
+               else min(self.spec.steps, self.step + n_steps))
+        history = []
+        for cb in self.callbacks:
+            cb.on_train_start(self)
+        try:
+            with jax.set_mesh(self.mesh):
+                while self.step < end and not self.stop_requested:
+                    record = self.run_step(self.step)
+                    self.step = record["step"] + 1
+                    self.last_record = record
+                    for cb in self.callbacks:
+                        cb.on_step_end(self, record)
+                    history.append(record)
+        finally:
+            for cb in self.callbacks:
+                cb.on_train_end(self)
+        return history

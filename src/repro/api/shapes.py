@@ -1,0 +1,52 @@
+"""Abstract (ShapeDtypeStruct) argument builders for lowering without
+materializing arrays — shared by the multi-pod dry-run and the wire-byte
+benchmarks so every harness lowers exactly the programs the sessions run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_sds(cfg: ModelConfig, seq_len: int, global_batch: int):
+    b = {"tokens": sds((global_batch, seq_len), jnp.int32)}
+    if cfg.enc_dec:
+        b["enc_frames"] = sds((global_batch, cfg.enc_frames, cfg.d_model),
+                              jnp.bfloat16)
+    return b
+
+
+def opt_sds(params_sds, moment_dtype=jnp.float32):
+    m = jax.tree.map(lambda s: sds(s.shape, moment_dtype), params_sds)
+    return {"m": m, "v": jax.tree.map(lambda s: sds(s.shape, moment_dtype), m),
+            "step": sds((), jnp.int32)}
+
+
+def cache_sds(cfg: ModelConfig, ctx, batch_local: int, max_seq: int):
+    """LOCAL (per-shard) decode-cache shapes via eval_shape."""
+    tree = jax.eval_shape(lambda: lm.init_cache(cfg, ctx, batch_local, max_seq))
+    return jax.tree.map(lambda s: sds(s.shape, s.dtype), tree)
+
+
+def globalize_cache_sds(local_sds, cache_spec, mesh):
+    """Scale local shard shapes back up to global shapes by the specs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s, spec):
+        shp = list(s.shape)
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shp[i] *= sizes[a]
+        return sds(shp, s.dtype)
+
+    return jax.tree.map(one, local_sds, cache_spec,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

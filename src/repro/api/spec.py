@@ -1,0 +1,346 @@
+"""Declarative run description: the repo's single programmatic surface.
+
+A ``RunSpec`` is a frozen, JSON-serializable description of ONE scenario
+(model x mesh x sync backend x optimizer x data x checkpointing).  Every
+entry point — ``launch/train.py``, ``launch/dryrun.py``, the examples and
+the benchmark harnesses — builds a RunSpec (from argparse flags or a JSON
+file) and hands it to a Session; nothing outside ``repro.api`` derives
+meshes, ``ShardCtx``, or step builders by hand.  Adding a scenario means
+writing a spec, not a driver.
+
+``MeshSpec`` replaces the loose ``(fsdp, seq_parallel, remat_groups, ...)``
+kwarg quartet that previously had to be kept manually consistent across
+``make_ctx`` / ``init_sync_state`` / ``make_train_step``: the ShardCtx is
+derived here, in exactly one place (``MeshSpec.ctx``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from ..collectives import SyncConfig, available_backends
+from ..data import DataConfig
+from ..launch.mesh import make_mesh
+from ..models.layers import ShardCtx
+from ..optim import AdamWConfig
+
+
+class SpecError(ValueError):
+    """A RunSpec is malformed or internally inconsistent."""
+
+
+class SpecMismatchError(SpecError):
+    """--resume found a checkpoint written by an incompatible RunSpec."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Device-mesh topology + parallelism strategy.
+
+    ``pods`` is the level-2 (cross-pod) data-parallel axis OptINC's cascade
+    mode targets; ``dp`` x ``tp`` is the per-pod (data, model) grid.
+    """
+    dp: int = 1
+    tp: int = 1
+    pods: int = 1
+    fsdp: bool = False
+    seq_parallel: bool = False
+    remat_groups: int = 0
+
+    def __post_init__(self):
+        if min(self.dp, self.tp, self.pods) < 1:
+            raise SpecError(f"mesh sizes must be >= 1: {self}")
+        if self.remat_groups < 0:
+            raise SpecError(f"remat_groups must be >= 0: {self}")
+
+    @property
+    def shape(self) -> tuple:
+        return ((self.pods, self.dp, self.tp) if self.pods > 1
+                else (self.dp, self.tp))
+
+    @property
+    def axis_names(self) -> tuple:
+        return (("pod", "data", "model") if self.pods > 1
+                else ("data", "model"))
+
+    @property
+    def devices(self) -> int:
+        return self.pods * self.dp * self.tp
+
+    @classmethod
+    def from_mesh(cls, mesh, *, fsdp: bool = False, seq_parallel: bool = False,
+                  remat_groups: int = 0) -> "MeshSpec":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return cls(dp=sizes.get("data", 1), tp=sizes.get("model", 1),
+                   pods=sizes.get("pod", 1), fsdp=fsdp,
+                   seq_parallel=seq_parallel, remat_groups=remat_groups)
+
+    def build(self):
+        """The jax Mesh for this topology (requires enough host devices)."""
+        return make_mesh(self.shape, self.axis_names)
+
+    def ctx(self, *, seq_shard_cache: bool = False) -> ShardCtx:
+        """THE place a ShardCtx is derived from a mesh description."""
+        return ShardCtx(tp=self.tp, dp=self.dp, pods=self.pods,
+                        fsdp=self.fsdp, seq_shard_cache=seq_shard_cache,
+                        seq_parallel=self.seq_parallel,
+                        remat_groups=self.remat_groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    dir: str = ""          # "" = checkpointing off
+    every: int = 50        # save every N steps (and on stop / final step)
+    keep: int = 3          # retained checkpoints
+    resume: bool = False   # restart from the newest valid checkpoint
+
+
+def _from_dict(cls, d):
+    """Rebuild a (possibly nested) frozen config dataclass from JSON data,
+    coercing lists back to tuples and rejecting unknown keys loudly."""
+    if not isinstance(d, dict):
+        raise SpecError(f"{cls.__name__} must be a JSON object, got {d!r}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - set(fields))
+    if unknown:
+        raise SpecError(f"unknown {cls.__name__} key(s): {unknown} "
+                        f"(known: {sorted(fields)})")
+    kw = {}
+    for name, val in d.items():
+        default = fields[name].default
+        if dataclasses.is_dataclass(default) and isinstance(val, dict):
+            val = _from_dict(type(default), val)
+        elif isinstance(default, tuple) and isinstance(val, list):
+            val = tuple(val)
+        kw[name] = val
+    return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One fully-specified scenario. Frozen + JSON round-trippable."""
+    arch: str = "paper_llama"
+    smoke: bool = False                 # use the arch's reduced SMOKE config
+    mesh: MeshSpec = MeshSpec()
+    sync: SyncConfig = SyncConfig()
+    optim: AdamWConfig = AdamWConfig()
+    # vocab 0 = the model's vocab; seed matches RunSpec.seed's default so
+    # the CLI keeps the legacy train.py behavior (--seed feeds both)
+    data: DataConfig = DataConfig(vocab=0, seed=0)
+    ckpt: CheckpointConfig = CheckpointConfig()
+    steps: int = 100
+    seed: int = 0
+    watchdog: float = 3.0               # straggler threshold (x median)
+    log: str = ""                       # JSONL metrics file ("" = stdout only)
+
+    # ------------------------------------------------ resolution helpers
+    def model_config(self):
+        from .. import configs
+        try:
+            return (configs.get_smoke(self.arch) if self.smoke
+                    else configs.get(self.arch))
+        except ModuleNotFoundError:
+            raise SpecError(
+                f"unknown arch {self.arch!r} (known: {configs.ARCHS})")
+
+    def resolved_data(self) -> DataConfig:
+        if self.data.vocab:
+            return self.data
+        return dataclasses.replace(self.data, vocab=self.model_config().vocab)
+
+    def resolved_sync(self) -> SyncConfig:
+        """Sync axes canonicalized to the mesh's DP axes."""
+        axes = (("pod", "data") if self.mesh.pods > 1 else ("data",))
+        return dataclasses.replace(self.sync, axes=axes)
+
+    def validate(self) -> "RunSpec":
+        self.model_config()
+        if self.steps < 1:
+            raise SpecError(f"steps must be >= 1, got {self.steps}")
+        if self.sync.mode not in available_backends():
+            raise SpecError(f"unknown sync backend {self.sync.mode!r} "
+                            f"(registered: {sorted(available_backends())})")
+        if self.sync.mode == "cascade" and self.mesh.pods < 2:
+            raise SpecError("--sync cascade needs a level-2 'pod' axis "
+                            "(mesh.pods >= 2, e.g. --pods 2)")
+        if self.sync.bucket_bytes <= 0:
+            raise SpecError(f"bucket_bytes must be > 0, "
+                            f"got {self.sync.bucket_bytes}")
+        dp_total = self.mesh.pods * self.mesh.dp
+        if self.data.global_batch % dp_total:
+            raise SpecError(f"global_batch {self.data.global_batch} not "
+                            f"divisible by pods*dp = {dp_total}")
+        if self.ckpt.resume and not self.ckpt.dir:
+            raise SpecError("ckpt.resume requires ckpt.dir")
+        return self
+
+    # ------------------------------------------------ JSON round-trip
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_json_dict(), indent=indent)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "RunSpec":
+        return _from_dict(cls, d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSpec":
+        return cls.from_json_dict(json.loads(text))
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "RunSpec":
+        try:
+            text = pathlib.Path(path).read_text()
+        except OSError as e:
+            raise SpecError(f"cannot read spec file {path}: {e}")
+        try:
+            return cls.from_json(text)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"spec file {path} is not valid JSON: {e}")
+
+    # ------------------------------------------------ resume compatibility
+    def compat_fingerprint(self) -> dict:
+        """The spec fields that determine checkpoint state STRUCTURE.
+        Anything else (lr, steps, sync mode, bits, ...) may change across
+        a resume; these may not."""
+        return {"arch": self.arch, "smoke": self.smoke,
+                "mesh": dataclasses.asdict(self.mesh),
+                "moment_dtype": self.optim.moment_dtype,
+                "error_feedback": self.sync.error_feedback}
+
+    # ------------------------------------------------ CLI surface
+    @staticmethod
+    def add_args(ap: argparse.ArgumentParser) -> None:
+        """The shared train-style CLI; every flag overrides the
+        corresponding RunSpec field (absent flags leave the base spec —
+        defaults or --spec file — untouched)."""
+        ap.add_argument("--spec", help="RunSpec JSON file (flags override)")
+        ap.add_argument("--arch", help="architecture id (repro.configs)")
+        ap.add_argument("--smoke-config", action="store_true",
+                        help="use the arch's reduced SMOKE config")
+        ap.add_argument("--sync", choices=sorted(available_backends()),
+                        help="gradient-sync backend")
+        ap.add_argument("--bucket-mb", type=float,
+                        help="fused gradient-bucket size in MiB")
+        ap.add_argument("--pods", type=int,
+                        help="pod (level-2) axis size; 0 = auto (2 for "
+                             "--sync cascade, else 1)")
+        ap.add_argument("--bits", type=int, help="OptINC bit width B")
+        ap.add_argument("--error-layers",
+                        help="Table II key, e.g. '3,4,5,6' (ONN errors)")
+        ap.add_argument("--error-feedback", action="store_true")
+        ap.add_argument("--fsdp", action="store_true",
+                        help="shard params over the data axis (ZeRO-3)")
+        ap.add_argument("--seq-parallel", action="store_true")
+        ap.add_argument("--remat-groups", type=int)
+        ap.add_argument("--steps", type=int)
+        ap.add_argument("--global-batch", type=int)
+        ap.add_argument("--seq-len", type=int)
+        ap.add_argument("--lr", type=float)
+        ap.add_argument("--mesh", help="DPxTP, e.g. 4x1")
+        ap.add_argument("--ckpt-dir")
+        ap.add_argument("--ckpt-every", type=int)
+        ap.add_argument("--ckpt-keep", type=int)
+        ap.add_argument("--resume", action="store_true")
+        ap.add_argument("--watchdog", type=float)
+        ap.add_argument("--seed", type=int)
+        ap.add_argument("--log", help="JSONL metrics file")
+
+    @classmethod
+    def from_args(cls, argv=None, description: str | None = None) -> "RunSpec":
+        ap = argparse.ArgumentParser(
+            description=description, argument_default=argparse.SUPPRESS,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
+        cls.add_args(ap)
+        ns = vars(ap.parse_args(argv))
+        base = cls.load(ns.pop("spec")) if "spec" in ns else cls()
+        return base.apply_cli(ns).validate()
+
+    def apply_cli(self, ns: dict) -> "RunSpec":
+        """Overlay a dict of (present-only) CLI args onto this spec."""
+        ns = dict(ns)
+        mesh_kw, sync_kw, opt_kw = {}, {}, {}
+        data_kw, ckpt_kw, top_kw = {}, {}, {}
+        if "arch" in ns:
+            top_kw["arch"] = ns.pop("arch")
+        if "smoke_config" in ns:
+            top_kw["smoke"] = ns.pop("smoke_config")
+        if "mesh" in ns:
+            raw = ns.pop("mesh")
+            try:
+                mesh_kw["dp"], mesh_kw["tp"] = (int(x) for x in raw.split("x"))
+            except ValueError:
+                raise SpecError(f"--mesh must be DPxTP (e.g. 4x1): {raw!r}")
+        pods = ns.pop("pods", None)
+        for k in ("fsdp", "seq_parallel", "remat_groups"):
+            if k in ns:
+                mesh_kw[k] = ns.pop(k)
+        if "sync" in ns:
+            sync_kw["mode"] = ns.pop("sync")
+        if "bits" in ns:
+            sync_kw["bits"] = ns.pop("bits")
+        if "bucket_mb" in ns:
+            sync_kw["bucket_bytes"] = int(ns.pop("bucket_mb") * 2 ** 20)
+        if "error_layers" in ns:
+            raw = ns.pop("error_layers")
+            sync_kw["error_layers"] = (tuple(int(x) for x in raw.split(","))
+                                       if raw else ())
+        if "error_feedback" in ns:
+            sync_kw["error_feedback"] = ns.pop("error_feedback")
+        if "lr" in ns:
+            opt_kw["lr"] = ns.pop("lr")
+        if "seq_len" in ns:
+            data_kw["seq_len"] = ns.pop("seq_len")
+        if "global_batch" in ns:
+            data_kw["global_batch"] = ns.pop("global_batch")
+        if "seed" in ns:
+            top_kw["seed"] = data_kw["seed"] = ns.pop("seed")
+        if "ckpt_dir" in ns:
+            ckpt_kw["dir"] = ns.pop("ckpt_dir")
+        if "ckpt_every" in ns:
+            ckpt_kw["every"] = ns.pop("ckpt_every")
+        if "ckpt_keep" in ns:
+            ckpt_kw["keep"] = ns.pop("ckpt_keep")
+        if "resume" in ns:
+            ckpt_kw["resume"] = ns.pop("resume")
+        for k in ("steps", "watchdog", "log"):
+            if k in ns:
+                top_kw[k] = ns.pop(k)
+        if ns:
+            raise SpecError(f"unhandled CLI key(s): {sorted(ns)}")
+        mode = sync_kw.get("mode", self.sync.mode)
+        if pods is not None and pods > 0:
+            mesh_kw["pods"] = pods
+        else:  # absent or 0: auto — cascade needs its level-2 axis
+            cur = mesh_kw.get("pods", self.mesh.pods)
+            if mode == "cascade" and cur < 2:
+                mesh_kw["pods"] = 2
+        return dataclasses.replace(
+            self,
+            mesh=dataclasses.replace(self.mesh, **mesh_kw),
+            sync=dataclasses.replace(self.sync, **sync_kw),
+            optim=dataclasses.replace(self.optim, **opt_kw),
+            data=dataclasses.replace(self.data, **data_kw),
+            ckpt=dataclasses.replace(self.ckpt, **ckpt_kw),
+            **top_kw)
+
+
+def validate_resume_compat(saved: RunSpec, current: RunSpec) -> None:
+    """Raise SpecMismatchError when a checkpointed RunSpec's state-structure
+    fields disagree with the resuming spec's."""
+    a, b = saved.compat_fingerprint(), current.compat_fingerprint()
+    diff = [k for k in b if a.get(k) != b[k]]
+    if diff:
+        detail = "; ".join(f"{k}: checkpoint={a.get(k)!r} vs run={b[k]!r}"
+                           for k in diff)
+        raise SpecMismatchError(
+            f"checkpoint was written by an incompatible RunSpec ({detail}). "
+            f"Start a fresh run (drop --resume / change --ckpt-dir) or match "
+            f"the checkpointed spec.")

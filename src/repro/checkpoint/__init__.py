@@ -1,1 +1,2 @@
-from .ckpt import (CheckpointManager, load_checkpoint, save_checkpoint)
+from .ckpt import (CheckpointManager, latest_step, load_checkpoint,
+                   read_manifest, save_checkpoint)

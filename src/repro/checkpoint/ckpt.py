@@ -3,9 +3,13 @@
 Layout:  <dir>/step_<N>/
             manifest.json       step, mesh shape, tree structure, per-leaf
                                 global shape/dtype/PartitionSpec, content hash
+                                (+ the run's RunSpec under extra.run_spec)
             arrays.npz          one entry per flattened leaf (global arrays;
                                 per-host shard files in a true multi-host
-                                deployment — single-host here)
+                                deployment — single-host here). Subtrees:
+                                params/, opt/, and — when error feedback is
+                                on — sync/ (the residual vectors), so a
+                                resumed run restores residuals bit-exactly.
 
 Guarantees:
   * atomic: written to step_<N>.tmp then os.replace()'d — a crash mid-write
@@ -37,13 +41,15 @@ def _flatten_with_paths(tree):
     return paths, [leaf for _, leaf in flat], treedef
 
 
-def save_checkpoint(direc, step: int, params, opt_state=None, extra=None,
-                    background: bool = False):
+def save_checkpoint(direc, step: int, params, opt_state=None, sync_state=None,
+                    extra=None, background: bool = False):
     direc = pathlib.Path(direc)
     direc.mkdir(parents=True, exist_ok=True)
     tree = {"params": params}
     if opt_state is not None:
         tree["opt"] = opt_state
+    if sync_state:  # error-feedback residuals ({} / None = nothing to save)
+        tree["sync"] = sync_state
     paths, leaves, _ = _flatten_with_paths(tree)
     # pull to host before handing to the writer thread; store extended
     # dtypes (bfloat16) as float32 — npz cannot round-trip them
@@ -84,6 +90,13 @@ def save_checkpoint(direc, step: int, params, opt_state=None, extra=None,
         return t
     write()
     return None
+
+
+def read_manifest(direc, step: int) -> dict:
+    """The manifest dict of one checkpoint (step, leaves, extra, hash) —
+    cheap spec/structure inspection without loading the arrays."""
+    p = pathlib.Path(direc) / f"step_{step}" / "manifest.json"
+    return json.loads(p.read_text())
 
 
 def latest_step(direc) -> int | None:
@@ -135,11 +148,11 @@ class CheckpointManager:
         self.keep = keep
         self._inflight = None
 
-    def save(self, step, params, opt_state=None, extra=None):
+    def save(self, step, params, opt_state=None, sync_state=None, extra=None):
         if self._inflight is not None:
             self._inflight.join()
         self._inflight = save_checkpoint(self.direc, step, params, opt_state,
-                                         extra, background=True)
+                                         sync_state, extra, background=True)
         self._gc()
 
     def wait(self):

@@ -1,18 +1,26 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b \
-      --shape train_4k [--multi-pod] [--sync optinc|ring|psum] \
+      --shape train_4k [--multi-pod] [--sync optinc|ring|psum|cascade] \
       [--fsdp auto|on|off] [--out results/dryrun]
 
 Each invocation compiles ONE cell in a fresh process (512 host devices) and
 writes a JSON record with memory_analysis, cost_analysis, and the parsed
 collective table for the roofline (§Roofline in EXPERIMENTS.md).
+
+The cells are lowered through ``repro.api``: a RunSpec describes the
+scenario and ``repro.api.build`` constructs exactly the shard_map programs
+``TrainSession`` / ``ServeSession`` run, so the dry-run measures the same
+code path serving and training execute.
 """
+# XLA_FLAGS must be in the environment before jax initializes its backend;
+# keep this mutation ahead of every jax (or repro) import.
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
 import argparse
 import json
 import pathlib
@@ -23,12 +31,11 @@ import jax.numpy as jnp
 
 from repro import compat  # noqa: F401  (jax API shims; after XLA_FLAGS)
 from repro import configs
-from repro.collectives import SyncConfig, available_backends
+from repro.api import MeshSpec, RunSpec, SpecError, SyncConfig, build
+from repro.api.shapes import (batch_sds, cache_sds, globalize_cache_sds,
+                              opt_sds, sds)
+from repro.collectives import available_backends
 from repro.launch import roofline
-from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (make_ctx, make_decode_step, make_prefill_step,
-                                make_train_step)
-from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
 
@@ -36,97 +43,71 @@ from repro.optim import AdamWConfig
 NO_FSDP = {"xlstm-125m", "whisper-tiny", "paper-llama"}
 
 
-def sds(shape, dtype):
-    return jax.ShapeDtypeStruct(tuple(shape), dtype)
-
-
-def batch_sds(cfg: ModelConfig, seq_len: int, global_batch: int):
-    b = {"tokens": sds((global_batch, seq_len), jnp.int32)}
-    if cfg.enc_dec:
-        b["enc_frames"] = sds((global_batch, cfg.enc_frames, cfg.d_model),
-                              jnp.bfloat16)
-    return b
-
-
-def opt_sds(params_sds, moment_dtype=jnp.float32):
-    m = jax.tree.map(lambda s: sds(s.shape, moment_dtype), params_sds)
-    return {"m": m, "v": jax.tree.map(lambda s: sds(s.shape, moment_dtype), m),
-            "step": sds((), jnp.int32)}
-
-
-def cache_sds(cfg, ctx, batch_local, max_seq):
-    tree = jax.eval_shape(lambda: lm.init_cache(cfg, ctx, batch_local, max_seq))
-    return jax.tree.map(lambda s: sds(s.shape, s.dtype), tree)
+def cell_spec(arch: str, multi_pod: bool, sync_mode: str,
+              fsdp_opt: str = "auto", moment_dtype: str = "bfloat16",
+              seq_parallel: bool = False, remat_groups: int = 0,
+              bucket_bytes: int = 4 * 2 ** 20, seq_len: int = 512,
+              global_batch: int = 32) -> RunSpec:
+    """The production-mesh RunSpec for one dry-run cell."""
+    from repro.api import DataConfig
+    cfg = configs.get(arch)
+    fsdp = (cfg.name not in NO_FSDP) if fsdp_opt == "auto" else fsdp_opt == "on"
+    mesh = MeshSpec(pods=2 if multi_pod else 1, dp=16, tp=16, fsdp=fsdp,
+                    seq_parallel=seq_parallel, remat_groups=remat_groups)
+    return RunSpec(arch=arch, mesh=mesh,
+                   sync=SyncConfig(mode=sync_mode, bucket_bytes=bucket_bytes),
+                   optim=AdamWConfig(moment_dtype=moment_dtype),
+                   data=DataConfig(vocab=0, seq_len=seq_len,
+                                   global_batch=global_batch, seed=0))
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
                fsdp_opt: str = "auto", moment_dtype: str = "bfloat16",
                seq_shard_long: bool = True, seq_parallel: bool = False,
                remat_groups: int = 0, bucket_bytes: int = 4 * 2 ** 20):
+    from repro.models import lm
     cfg = configs.get(arch)
     cell = configs.cells(arch)[shape_name]
     if "skip" in cell:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "skipped": cell["skip"]}
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    fsdp = (cfg.name not in NO_FSDP) if fsdp_opt == "auto" else fsdp_opt == "on"
-    dp_total = (2 * 16) if multi_pod else 16
+    spec = cell_spec(arch, multi_pod, sync_mode, fsdp_opt, moment_dtype,
+                     seq_parallel, remat_groups, bucket_bytes,
+                     seq_len=cell["seq_len"], global_batch=cell["global_batch"])
+    mesh = spec.mesh.build()
+    dp_total = spec.mesh.pods * spec.mesh.dp
     kind = cell["kind"]
     t0 = time.time()
 
     if kind == "train":
-        if sync_mode == "cascade" and not multi_pod:
-            raise SystemExit("--sync cascade needs --multi-pod (a 'pod' "
-                             "level-2 axis)")
-        sync = SyncConfig(mode=sync_mode,
-                          axes=("pod", "data") if multi_pod else ("data",),
-                          bucket_bytes=bucket_bytes)
-        opt = AdamWConfig(moment_dtype=moment_dtype)
-        step, _, _ = make_train_step(cfg, mesh, sync, opt, fsdp=fsdp,
-                                     seq_parallel=seq_parallel,
-                                     remat_groups=remat_groups)
-        ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
-                       remat_groups=remat_groups)
+        spec.validate()
+        step, _, _ = build.build_train_step(spec, cfg, mesh)
+        ctx = spec.mesh.ctx()
         p_sds = lm.param_shape_dtype(cfg, ctx)
         mdt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
         args = (p_sds, opt_sds(p_sds, mdt), {},
                 batch_sds(cfg, cell["seq_len"], cell["global_batch"]),
                 jax.eval_shape(lambda: jax.random.PRNGKey(0)))
     elif kind == "prefill":
-        step, _, _ = make_prefill_step(cfg, mesh, fsdp=fsdp,
-                                       seq_parallel=seq_parallel,
-                                       remat_groups=remat_groups)
-        ctx = make_ctx(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
-                       remat_groups=remat_groups)
+        step, _, _ = build.build_prefill_step(spec, cfg, mesh)
+        ctx = spec.mesh.ctx()
         p_sds = lm.param_shape_dtype(cfg, ctx)
         args = (p_sds, batch_sds(cfg, cell["seq_len"], cell["global_batch"]))
     else:  # decode
         gb = cell["global_batch"]
         shardable = gb >= dp_total
         seq_shard = (not shardable) and seq_shard_long
-        step, _, _ = make_decode_step(cfg, mesh, fsdp=fsdp,
-                                      seq_shard_cache=seq_shard,
-                                      batch_shardable=shardable)
-        ctx = make_ctx(mesh, fsdp=fsdp, seq_shard_cache=seq_shard)
+        step, _, _ = build.build_decode_step(spec, cfg, mesh,
+                                             seq_shard_cache=seq_shard,
+                                             batch_shardable=shardable)
+        ctx = spec.mesh.ctx(seq_shard_cache=seq_shard)
         p_sds = lm.param_shape_dtype(cfg, ctx)
         b_local = gb // dp_total if shardable else gb
         c_sds = cache_sds(cfg, ctx, b_local, cell["seq_len"])
-        # global cache shapes: local shard shapes scaled back up by specs
-        from repro.launch.steps import cache_specs
-        cspec = cache_specs(cfg, ctx, batch_shardable=shardable)
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-
-        def globalize(s, spec):
-            shp = list(s.shape)
-            for i, ax in enumerate(spec):
-                if ax is None:
-                    continue
-                for a in (ax if isinstance(ax, tuple) else (ax,)):
-                    shp[i] *= sizes[a]
-            return sds(shp, s.dtype)
-        c_sds = jax.tree.map(globalize, c_sds, cspec,
-                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        cspec = build.decode_cache_specs(spec, cfg, seq_shard_cache=seq_shard,
+                                         batch_shardable=shardable)
+        c_sds = globalize_cache_sds(c_sds, cspec, mesh)
         args = (p_sds, c_sds, sds((gb, 1), jnp.int32), sds((), jnp.int32))
 
     # donate params/opt (train) or cache (decode) so memory_analysis
@@ -140,6 +121,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = roofline.parse_collectives(hlo)
     chips = mesh.devices.size
@@ -154,8 +137,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "kind": kind, "sync": sync_mode if kind == "train" else None,
-        "fsdp": fsdp, "seq_parallel": seq_parallel,
+        "fsdp": spec.mesh.fsdp, "seq_parallel": seq_parallel,
         "remat_groups": remat_groups, "chips": chips,
+        "run_spec": spec.to_json_dict(),
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "raw_stats": True,
         "memory": {  # per-device
@@ -178,7 +162,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, sync_mode: str,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(configs.SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
@@ -193,11 +179,14 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
-    rec = lower_cell(args.arch, args.shape, args.multi_pod, args.sync,
-                     args.fsdp, args.moment_dtype,
-                     seq_parallel=args.seq_parallel,
-                     remat_groups=args.remat_groups,
-                     bucket_bytes=int(args.bucket_mb * 2 ** 20))
+    try:
+        rec = lower_cell(args.arch, args.shape, args.multi_pod, args.sync,
+                         args.fsdp, args.moment_dtype,
+                         seq_parallel=args.seq_parallel,
+                         remat_groups=args.remat_groups,
+                         bucket_bytes=int(args.bucket_mb * 2 ** 20))
+    except SpecError as e:
+        raise SystemExit(f"error: {e}")
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     tag = (f"{args.arch}.{args.shape}."

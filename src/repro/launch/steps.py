@@ -38,11 +38,12 @@ from ..optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
 
 def make_ctx(mesh, fsdp: bool = False, seq_shard_cache: bool = False,
              seq_parallel: bool = False, remat_groups: int = 0) -> ShardCtx:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return ShardCtx(tp=sizes.get("model", 1), dp=sizes.get("data", 1),
-                    pods=sizes.get("pod", 1), fsdp=fsdp,
-                    seq_shard_cache=seq_shard_cache,
-                    seq_parallel=seq_parallel, remat_groups=remat_groups)
+    """ShardCtx for an existing mesh — delegates to repro.api.MeshSpec,
+    the single place ShardCtx derivation lives."""
+    from ..api.spec import MeshSpec  # lazy: repro.api imports this module
+    return MeshSpec.from_mesh(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                              remat_groups=remat_groups
+                              ).ctx(seq_shard_cache=seq_shard_cache)
 
 
 def batch_specs(ctx: ShardCtx, cfg: ModelConfig, batch_shardable: bool = True):
@@ -161,11 +162,12 @@ def init_sync_state(cfg: ModelConfig, mesh, sync: SyncConfig,
     """Zero-initialized global sync_state matching ``sync_state_specs``.
 
     Residuals are per-device local quantization error, so the global
-    arrays are (n_devices * local_group_size,) f32 vectors.  Not
-    checkpointed: a resumed run restarts feedback from zero residuals
-    (one step of extra quantization noise).  ``error_feedback`` merges
-    into ``sync`` exactly as in ``make_train_step`` so the two calls
-    always agree on the state structure.
+    arrays are (n_devices * local_group_size,) f32 vectors.  They are
+    checkpointed alongside params/opt (``CheckpointManager.save``'s
+    ``sync_state`` with the ``sync_state_specs`` sharding), so a resumed
+    run restores them bit-exactly.  ``error_feedback`` merges into
+    ``sync`` exactly as in ``make_train_step`` so the two calls always
+    agree on the state structure.
     """
     if not (sync.error_feedback or error_feedback):
         return {}

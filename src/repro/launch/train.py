@@ -1,4 +1,4 @@
-"""End-to-end training driver with fault tolerance.
+"""End-to-end training driver — a thin client of ``repro.api``.
 
   PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
       --sync optinc --steps 200 --global-batch 32 --seq-len 512 \
@@ -9,152 +9,29 @@
   PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
       --smoke-config --sync cascade --mesh 2x1 --bucket-mb 4
 
-Fault tolerance:
-  * SIGTERM/SIGINT force a final checkpoint before exit (preemption safe)
-  * --resume restarts from the newest valid checkpoint (corrupt ones are
-    skipped by manifest validation)
-  * the data pipeline is deterministic-by-step, so the resumed run sees
-    exactly the tokens it would have seen
-  * a step-time watchdog logs straggler steps (> watchdog x median)
+  # or describe the whole scenario declaratively:
+  PYTHONPATH=src python -m repro.launch.train --spec my_run.json
+
+Every flag is a RunSpec field override (``RunSpec.from_args``); the run
+itself — mesh/ShardCtx derivation, init-or-resume, the jitted step loop,
+JSONL logging, periodic + SIGTERM-safe checkpointing (params, optimizer,
+AND error-feedback residuals), straggler watchdog — lives in
+``repro.api.TrainSession``.  ``--resume`` validates the checkpointed
+RunSpec against this one and restores bit-exactly.
 """
 from __future__ import annotations
 
-import argparse
-import json
-import signal
-import statistics
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import compat  # noqa: F401  (jax API shims: set_mesh et al.)
-from repro import configs
-from repro.checkpoint import CheckpointManager, load_checkpoint
-from repro.checkpoint.ckpt import latest_step
-from repro.collectives import SyncConfig, available_backends
-from repro.data import DataConfig, SyntheticLM
-from repro.launch.mesh import make_mesh
-from repro.launch.steps import (init_sync_state, make_ctx, make_train_step,
-                                opt_specs)
-from repro.models import lm
-from repro.optim import AdamWConfig, adamw_init
+from repro.api import RunSpec, SpecError, TrainSession
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="paper_llama")
-    ap.add_argument("--smoke-config", action="store_true",
-                    help="use the arch's reduced SMOKE config")
-    ap.add_argument("--sync", default="optinc",
-                    choices=list(available_backends()))
-    ap.add_argument("--bucket-mb", type=float, default=4.0,
-                    help="fused gradient-bucket size in MiB (collective "
-                         "launches per step scale as total_bytes/bucket)")
-    ap.add_argument("--pods", type=int, default=0,
-                    help="pod (level-2) axis size; 0 = auto (2 for "
-                         "--sync cascade, else 1)")
-    ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--error-layers", default="",
-                    help="Table II key, e.g. '3,4,5,6' (injects ONN errors)")
-    ap.add_argument("--error-feedback", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--global-batch", type=int, default=32)
-    ap.add_argument("--seq-len", type=int, default=512)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--mesh", default="1x1", help="DPxTP, e.g. 4x1")
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--watchdog", type=float, default=3.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--log", default="")
-    args = ap.parse_args(argv)
-
-    dp, tp = (int(x) for x in args.mesh.split("x"))
-    pods = args.pods or (2 if args.sync == "cascade" else 1)
-    if pods > 1:
-        # cascade's level-2 axis: (pod, data, model) mesh
-        mesh = make_mesh((pods, dp, tp), ("pod", "data", "model"))
-    else:
-        mesh = make_mesh((dp, tp), ("data", "model"))
-    cfg = configs.get_smoke(args.arch) if args.smoke_config else configs.get(args.arch)
-    err = tuple(int(x) for x in args.error_layers.split(",")) if args.error_layers else ()
-    sync = SyncConfig(mode=args.sync, axes=("data",), bits=args.bits,
-                      block=2048, error_layers=err,
-                      error_feedback=args.error_feedback,
-                      bucket_bytes=int(args.bucket_mb * 2 ** 20))
-    opt_cfg = AdamWConfig(lr=args.lr)
-    ctx = make_ctx(mesh)
-
-    params = lm.init_params(cfg, ctx, jax.random.PRNGKey(args.seed))
-    opt_state = adamw_init(opt_cfg, params)
-    start = 0
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    if args.resume and args.ckpt_dir:
-        s = latest_step(args.ckpt_dir)
-        if s is not None:
-            specs = {"params": lm.flat_specs(cfg, ctx),
-                     "opt": opt_specs(lm.flat_specs(cfg, ctx))}
-            tree, man = load_checkpoint(args.ckpt_dir, s,
-                                        {"params": params, "opt": opt_state},
-                                        mesh=mesh, specs=specs)
-            params, opt_state = tree["params"], tree["opt"]
-            start = s + 1
-            print(f"resumed from step {s}", flush=True)
-
-    step_fn, _, _ = make_train_step(cfg, mesh, sync, opt_cfg)
-    sync_state = init_sync_state(cfg, mesh, sync)
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
-    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
-                      global_batch=args.global_batch, seed=args.seed)
-    ds = SyntheticLM(data)
-
-    stop = {"flag": False}
-
-    def handler(sig, frame):
-        print(f"signal {sig}: checkpointing and exiting", flush=True)
-        stop["flag"] = True
-
-    signal.signal(signal.SIGTERM, handler)
-    signal.signal(signal.SIGINT, handler)
-
-    logf = open(args.log, "a") if args.log else None
-    times = []
-    key = jax.random.PRNGKey(args.seed + 1)
-    with jax.set_mesh(mesh):
-        for step in range(start, args.steps):
-            t0 = time.time()
-            batch = {"tokens": jnp.asarray(ds.batch(step))}
-            key, sub = jax.random.split(key)
-            params, opt_state, sync_state, metrics = jitted(
-                params, opt_state, sync_state, batch, sub)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            times.append(dt)
-            med = statistics.median(times[-50:])
-            straggler = dt > args.watchdog * med and len(times) > 10
-            rec = {"step": step, "loss": round(loss, 5),
-                   "time_s": round(dt, 3)}
-            if straggler:
-                rec["straggler"] = True
-            line = json.dumps(rec)
-            print(line, flush=True)
-            if logf:
-                logf.write(line + "\n")
-                logf.flush()
-            if mgr and ((step + 1) % args.ckpt_every == 0 or stop["flag"]
-                        or step == args.steps - 1):
-                mgr.save(step, params, opt_state,
-                         extra={"arch": cfg.name, "sync": args.sync})
-            if stop["flag"]:
-                break
-    if mgr:
-        mgr.wait()
-    if logf:
-        logf.close()
+    try:
+        spec = RunSpec.from_args(argv, description=__doc__)
+        TrainSession(spec).run()
+    except SpecError as e:
+        raise SystemExit(f"error: {e}")
     return 0
 
 

@@ -127,7 +127,7 @@ def test_optinc_launch_count_is_o_buckets():
     p_sds = lm.param_shape_dtype(cfg, ctx)
     nparams = sum(int(s.size) for s in jax.tree.leaves(p_sds))
     fn, _, _ = steps.make_train_step(cfg, MESH, sync, AdamWConfig())
-    from repro.launch.dryrun import batch_sds, opt_sds
+    from repro.api.shapes import batch_sds, opt_sds
     args = (p_sds, opt_sds(p_sds), {}, batch_sds(cfg, 33, 2),
             jax.eval_shape(lambda: jax.random.PRNGKey(0)))
     jaxpr = str(jax.make_jaxpr(fn)(*args))

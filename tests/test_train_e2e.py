@@ -48,3 +48,24 @@ def test_resume_is_exact(tmp_path):
     assert min(g) == 5  # really resumed, not restarted
     for s in (6, 7, 8, 9):
         assert abs(f[s] - g[s]) < 1e-3, (s, f[s], g[s])
+
+
+@pytest.mark.slow
+def test_error_feedback_resume_exact(tmp_path):
+    """--resume with --error-feedback restores the residual sync_state from
+    the checkpoint: the resumed steps equal an uninterrupted run EXACTLY
+    (before sync_state was checkpointed, residuals restarted from zero and
+    the trajectories diverged)."""
+    base = ["--arch", "minitron_4b", "--smoke-config", "--sync", "optinc",
+            "--error-feedback", "--global-batch", "2", "--seq-len", "32",
+            "--lr", "1e-3", "--ckpt-every", "2"]
+    full = run_train(base + ["--steps", "6",
+                             "--ckpt-dir", str(tmp_path / "ref")])
+    run_train(base + ["--steps", "4", "--ckpt-dir", str(tmp_path / "re")])
+    resumed = run_train(base + ["--steps", "6", "--resume",
+                                "--ckpt-dir", str(tmp_path / "re")])
+    f = {r["step"]: r["loss"] for r in full}
+    g = {r["step"]: r["loss"] for r in resumed}
+    assert min(g) == 4  # really resumed, not restarted
+    for s in (4, 5):
+        assert f[s] == g[s], (s, f[s], g[s])
