@@ -7,9 +7,18 @@ shortened versions of BOTH models on deterministic synthetic streams and
 compares final losses across sync modes. The paper's claim shape —
 OptINC quantization costs almost nothing; Table-II error injection costs
 slightly more but stays in range — is what we check.
+
+The ``optinc_b2_{behavioral,mesh}`` pair puts the emulated hardware in
+the loop: at bits=2 the built-in exact identity ONN resolves without
+training, so ``--fidelity mesh`` runs the fast Givens-layer emulator
+(repro.photonics.mesh) inside every jitted step and must reproduce the
+behavioral losses EXACTLY (same RNG, bit-exact collective).
+
+``--smoke`` (CI) runs only the short behavioral LM rows.
 """
 from __future__ import annotations
 
+import argparse
 import json
 
 from .common import emit, run_subprocess
@@ -34,7 +43,7 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from repro.models import resnet
 from repro.data.pipeline import synthetic_images
-from repro.core.collective import SyncConfig, sync_gradients
+from repro.collectives import SyncConfig, sync_gradients
 from repro.launch.mesh import make_mesh
 from jax.sharding import PartitionSpec as P
 
@@ -64,13 +73,18 @@ print(json.dumps({{"first": sum(losses[:3])/3, "last": sum(losses[-3:])/3}}))
 """
 
 
-def main(full: bool = False):
-    lm_steps = 60 if full else 25
+def main(full: bool = False, smoke: bool = False):
+    lm_steps = 60 if full else (6 if smoke else 25)
     rn_steps = 30 if full else 10
     runs = [("baseline_psum", "psum", ""),
-            ("optinc_ideal", "optinc", ""),
-            ("optinc_err3456", "optinc",
-             ', "--error-layers", "3,4,5,6"')]
+            ("optinc_ideal", "optinc", "")]
+    if not smoke:
+        runs += [("optinc_err3456", "optinc",
+                  ', "--error-layers", "3,4,5,6"'),
+                 # hardware-in-the-loop pair: bit-exact against each other
+                 ("optinc_b2_behavioral", "optinc", ', "--bits", "2"'),
+                 ("optinc_b2_mesh", "optinc",
+                  ', "--bits", "2", "--fidelity", "mesh"')]
     for name, sync, extra in runs:
         out = run_subprocess(LM_RUN.format(sync=sync, steps=lm_steps,
                                            extra=extra), timeout=3000)
@@ -78,6 +92,8 @@ def main(full: bool = False):
         emit(f"fig7a.llama.{name}", 0.0,
              f"loss_first={rec['first']:.4f} loss_last={rec['last']:.4f} "
              f"steps={lm_steps}")
+    if smoke:
+        return
     for name, sync, err in [("baseline_psum", "psum", "()"),
                             ("optinc_err3456", "optinc", "(3,4,5,6)")]:
         out = run_subprocess(RESNET_RUN.format(sync=sync, err=err,
@@ -89,4 +105,9 @@ def main(full: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short behavioral LM rows only (CI)")
+    args = ap.parse_args()
+    main(full=args.full, smoke=args.smoke)

@@ -1,0 +1,120 @@
+"""Numpy-vs-JAX MZI mesh emulation throughput (EXPERIMENTS.md §Mesh).
+
+The numpy oracle (repro.photonics.mzi) rebuilds an orthogonal from its
+phase program one Givens matrix at a time — the cost every
+``apply_hardware`` call used to pay.  The jax emulator
+(repro.photonics.mesh) compiles the program once into stacked rotation
+layers and applies them with lax.scan + gather/scatter.  This harness
+measures both on the same programs and asserts the emulator's >= 10x
+advantage (the acceptance bar of the photonics refactor; in practice it
+is orders of magnitude).
+
+    PYTHONPATH=src python -m benchmarks.mesh_emulation [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.photonics import mesh, mzi, onn
+from repro.photonics.onn import ONNConfig
+
+from .common import emit, timed
+
+TINY = ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
+                 bits=4, n_servers=2, k_inputs=2)
+
+MIN_SPEEDUP = 10.0
+
+
+def _block(x):
+    jax.tree.map(lambda a: a.block_until_ready(), x)
+    return x
+
+
+def bench_orthogonal(m: int, batch: int) -> list:
+    """One m-port mesh: numpy reconstruct+matmul vs compiled scan apply.
+    Returns the [reconstruct, batched-apply] speedups.
+
+    The numpy loop is O(K m^2) = O(m^4) per rebuild and batch-independent;
+    the emulator is O(L m) = O(m^2) per applied vector — its advantage
+    grows with the port count and is amortized-rebuild per call."""
+    rng = np.random.default_rng(m)
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    prog = mzi.givens_decompose(q)
+    emu = mesh.MZIMesh.compile(prog)
+    x = rng.normal(size=(batch, m)).astype(np.float32)
+    xj = jnp.asarray(x)
+
+    _, np_rec_us = timed(mzi.reconstruct, prog, repeats=1)
+    jit_mat = jax.jit(emu.matrix)
+    _, jx_rec_us = timed(lambda: _block(jit_mat()))
+    rec = np_rec_us / jx_rec_us
+    emit(f"mesh_emulation.reconstruct.m{m}", jx_rec_us,
+         f"numpy_us={np_rec_us:.0f} jax_us={jx_rec_us:.0f} "
+         f"speedup={rec:.1f}")
+
+    # application semantics of the numpy oracle: rebuild + matmul per call
+    _, np_app_us = timed(lambda: x @ mzi.reconstruct(prog).T, repeats=1)
+    jit_apply = jax.jit(emu.apply)
+    _, jx_app_us = timed(lambda: _block(jit_apply(xj)))
+    app = np_app_us / jx_app_us
+    emit(f"mesh_emulation.apply.m{m}.b{batch}", jx_app_us,
+         f"numpy_us={np_app_us:.0f} jax_us={jx_app_us:.0f} "
+         f"speedup={app:.1f}")
+    return [rec, app]
+
+
+def bench_onn_forward(batch: int) -> float:
+    """Full programmed-ONN forward pass: numpy apply_hardware oracle vs
+    the compiled emulator.  Returns the speedup."""
+    params = onn.project_approx(onn.init_params(TINY, jax.random.PRNGKey(0)),
+                                TINY)
+    hw = onn.map_to_hardware(params, TINY)
+    progs = mesh.compile_hardware(hw)
+    a = np.random.default_rng(0).uniform(
+        0, TINY.in_scale, size=(batch, 2)).astype(np.float32)
+    aj = jnp.asarray(a)
+
+    _, np_us = timed(onn.apply_hardware, hw, a, TINY, repeats=1)
+    fwd = jax.jit(lambda x: mesh.apply_hardware(progs, x, TINY))
+    _, jx_us = timed(lambda: _block(fwd(aj)))
+    speedup = np_us / jx_us
+    emit(f"mesh_emulation.onn_forward.tiny.b{batch}", jx_us,
+         f"numpy_us={np_us:.0f} jax_us={jx_us:.0f} speedup={speedup:.1f}")
+    return speedup
+
+
+def main(full: bool = False, smoke: bool = False) -> None:
+    sizes = [(128, 1024)] if smoke else [(64, 256), (128, 2048)]
+    if full:
+        sizes.append((192, 2048))
+    speedups = []
+    for m, b in sizes:
+        speedups.extend(bench_orthogonal(m, b))
+    speedups.append(bench_onn_forward(256))
+    worst = min(speedups)
+    emit("mesh_emulation.min_speedup", 0.0,
+         f"worst_speedup={worst:.1f} required={MIN_SPEEDUP:g}")
+    if worst < MIN_SPEEDUP:
+        # RuntimeError (not SystemExit) so benchmarks.run's harness can
+        # record the section failure and keep sweeping
+        raise RuntimeError(
+            f"mesh emulator speedup {worst:.1f}x below the {MIN_SPEEDUP:g}x "
+            f"acceptance bar")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest sizes only (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the 192-port mesh")
+    args = ap.parse_args()
+    try:
+        main(full=args.full, smoke=args.smoke)
+    except RuntimeError as e:
+        raise SystemExit(str(e))

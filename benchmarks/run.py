@@ -12,7 +12,8 @@ import argparse
 import sys
 import traceback
 
-from . import fig6, fig7a, fig7b, roofline_table, table1, table2
+from . import (fig6, fig7a, fig7b, mesh_emulation, roofline_table, table1,
+               table2)
 
 SECTIONS = {
     "table1": table1.main,
@@ -20,6 +21,7 @@ SECTIONS = {
     "fig6": fig6.main,
     "fig7a": fig7a.main,
     "fig7b": fig7b.main,
+    "mesh_emulation": mesh_emulation.main,
     "roofline": roofline_table.main,
 }
 

@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import area, dataset, training
-from repro.core.onn import ONNConfig
+from repro.photonics import area, dataset, training
+from repro.photonics import ONNConfig
 
 from .common import emit, load_scenario1
 

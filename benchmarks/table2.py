@@ -1,9 +1,17 @@
 """Paper Table II: matrix-approximation layer sweep for scenario 4 —
 area ratio per selected-layer set + the paper's measured error model
-(reused for error injection in fig7a)."""
+(reused for error injection in fig7a).
+
+The ``mesh_check`` row programs a representative approximated layer
+(Sigma_a U_a blocks -> Givens phases) and verifies it through the FAST
+jax mesh emulator (repro.photonics.mesh) instead of the numpy loop:
+programmed-MZI count vs the area model's budget, and emulator output vs
+the projected weight matrix."""
 from __future__ import annotations
 
-from repro.core import area, error_model
+import numpy as np
+
+from repro.photonics import approx, area, error_model, mesh, mzi
 
 from .common import emit
 
@@ -11,6 +19,31 @@ ST4 = [4, 64, 128, 256, 512, 256, 128, 64, 8]
 PAPER_ROWS = [((4, 5, 6), 0.493), ((4, 5, 6, 7), 0.479),
               ((4, 5, 6, 7, 8), 0.474), ((3, 4, 5, 6), 0.437),
               ((3, 4, 5, 6, 7), 0.422)]
+
+
+def mesh_check(m: int = 128, n: int = 64):
+    """Program one approximated m x n layer and run the jax emulator."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(m, n))
+    s = approx.block_size(m, n)
+    blocks, wa_rows = [], []
+    for ws in w.reshape(m // s, s, n):
+        d, ua = approx.approx_block_factors(ws)
+        blocks.append({"d": d, "u": mzi.givens_decompose(ua)})
+        wa_rows.append(d[:, None] * ua)
+    wa = np.concatenate(wa_rows, axis=0)       # the Sigma_a U_a projection
+    prog = mesh.compile_layer({"kind": "approx", "blocks": blocks,
+                               "shape": (m, n), "b": np.zeros(m)})
+    x = rng.normal(size=(64, n)).astype(np.float32)
+    got = np.asarray(prog.apply(jnp.asarray(x)))
+    err = float(np.abs(got - x @ wa.T).max())
+    budget = area.mzi_count_approx(m, n)
+    assert prog.num_mzis <= budget, (prog.num_mzis, budget)
+    assert err < 1e-3, err
+    emit("table2.mesh_check", 0.0,
+         f"layer={m}x{n} mzis_model={budget} mzis_programmed={prog.num_mzis} "
+         f"emulator_max_err={err:.2e}")
 
 
 def main(full: bool = False):
@@ -21,6 +54,7 @@ def main(full: bool = False):
         emit(f"table2.layers_{'_'.join(map(str, layers))}", 0.0,
              f"area_ratio={ratio:.3f} paper={paper} "
              f"onn_acc={spec.accuracy} errors=[{errs}]")
+    mesh_check()
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.collectives import SyncConfig, sync_gradients  # noqa: E402
 from repro.core import cascade  # noqa: E402
 from repro.core.cascade import CascadeConfig  # noqa: E402
-from repro.core.encoding import QuantSpec, quantize  # noqa: E402
+from repro.photonics.encoding import QuantSpec, quantize  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
 

@@ -52,8 +52,8 @@ def run_api(args):
 def run_onn(scenario1: bool):
     import numpy as np
 
-    from repro.core import area, dataset, encoding, onn, training
-    from repro.core.onn import ONNConfig
+    from repro.photonics import area, dataset, encoding, onn, training
+    from repro.photonics import ONNConfig
 
     if scenario1:
         cfg = ONNConfig(structure=(4, 64, 128, 256, 128, 64, 4),
@@ -88,10 +88,31 @@ def run_onn(scenario1: bool):
     print(f"ONN accuracy: {acc:.6f} (paper: 1.0)")
 
     # --- step 4: MZI programming + optical verification ---
+    # numpy oracle on a slice, fast jax emulator on the same slice
+    import jax
+    from repro.photonics import mesh
     hw = onn.map_to_hardware(params, cfg)
     sw_out = np.asarray(training.apply_onn(params, a[:128], cfg))
     hw_out = onn.apply_hardware(hw, a[:128], cfg)
     print(f"MZI-mesh vs software max |diff|: {np.abs(hw_out - sw_out).max():.2e}")
+    progs = mesh.compile_hardware(hw)
+    emu_out = np.asarray(jax.jit(
+        lambda x: mesh.apply_hardware(progs, x, cfg))(jnp.asarray(a[:128])))
+    print(f"jax emulator vs numpy oracle max |diff|: "
+          f"{np.abs(emu_out - hw_out).max():.2e}")
+
+    if scenario1:
+        # persist for benchmarks/table1.py and the runtime's 'results'
+        # source (--fidelity onn/mesh at bits=8)
+        import pathlib
+        import pickle
+        out = pathlib.Path("results")
+        out.mkdir(exist_ok=True)
+        with open(out / "scenario1_params.pkl", "wb") as f:
+            pickle.dump({"cfg": cfg, "params": [
+                {"w": np.asarray(l["w"]), "b": np.asarray(l["b"])}
+                for l in params]}, f)
+        print(f"saved trained params -> {out / 'scenario1_params.pkl'}")
 
     # --- step 5: area ---
     ratio = area.area_ratio(list(cfg.structure), set(cfg.approx_layers))

@@ -12,6 +12,7 @@ quickstart and the scenario matrix.
 from ..collectives import SyncConfig
 from ..data import DataConfig
 from ..optim import AdamWConfig
+from ..photonics import PhotonicsConfig
 from .build import (build_decode_step, build_prefill_step, build_train_step,
                     decode_cache_specs, init_sync_state, param_specs,
                     sync_state_specs)
@@ -24,7 +25,8 @@ from .spec import (CheckpointConfig, MeshSpec, RunSpec, SpecError,
 
 __all__ = [
     "RunSpec", "MeshSpec", "CheckpointConfig", "SyncConfig", "AdamWConfig",
-    "DataConfig", "SpecError", "SpecMismatchError", "validate_resume_compat",
+    "DataConfig", "PhotonicsConfig", "SpecError", "SpecMismatchError",
+    "validate_resume_compat",
     "TrainSession", "ServeSession",
     "Callback", "JsonlLogger", "PeriodicCheckpoint", "SigtermHandler",
     "StragglerWatchdog", "default_callbacks",

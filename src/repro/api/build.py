@@ -18,6 +18,23 @@ def _parts(spec: RunSpec, cfg, mesh):
     return cfg, mesh
 
 
+def warmup_photonics(spec: RunSpec):
+    """Resolve the in-network ONN for spec's photonic fidelity eagerly
+    (no-op for 'behavioral').  Sessions call this at build time so a slow
+    params source ('train') or a missing one fails before the step loop,
+    not in the middle of a shard_map trace."""
+    sync = spec.resolved_sync()
+    if sync.photonics.fidelity == "behavioral":
+        return None
+    from ..photonics import runtime
+    m = spec.mesh
+    module = runtime.warmup(sync, m.pods * m.dp)
+    if m.fsdp and m.pods > 1:
+        # the FSDP-sharded leaf group syncs over the pod axis only
+        runtime.warmup(sync, m.pods)
+    return module
+
+
 def build_train_step(spec: RunSpec, cfg=None, mesh=None):
     """(step_fn, in_specs, out_specs) for spec's training scenario.
     step(params, opt_state, sync_state, batch, key) — shard_map'd, not

@@ -60,6 +60,7 @@ class TrainSession:
         if spec.ckpt.resume:
             self._maybe_resume()
 
+        build.warmup_photonics(spec)   # onn/mesh fidelity: resolve eagerly
         step_fn, _, _ = build.build_train_step(spec, self.cfg, self.mesh)
         self._jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
         # per-step keys are folded from a base key, NOT split sequentially,

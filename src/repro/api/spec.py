@@ -25,6 +25,7 @@ from ..data import DataConfig
 from ..launch.mesh import make_mesh
 from ..models.layers import ShardCtx
 from ..optim import AdamWConfig
+from ..photonics import FIDELITIES
 
 
 class SpecError(ValueError):
@@ -115,7 +116,12 @@ def _from_dict(cls, d):
         elif isinstance(default, tuple) and isinstance(val, list):
             val = tuple(val)
         kw[name] = val
-    return cls(**kw)
+    try:
+        return cls(**kw)
+    except (TypeError, ValueError) as e:
+        # config dataclasses validate in __post_init__ (e.g. an unknown
+        # PhotonicsConfig fidelity) — surface those as spec errors too
+        raise SpecError(f"invalid {cls.__name__}: {e}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +171,14 @@ class RunSpec:
         if self.sync.mode == "cascade" and self.mesh.pods < 2:
             raise SpecError("--sync cascade needs a level-2 'pod' axis "
                             "(mesh.pods >= 2, e.g. --pods 2)")
+        # (an unknown fidelity/params value is rejected by PhotonicsConfig
+        # itself at construction time — _from_dict wraps that in SpecError)
+        ph = self.sync.photonics
+        if ph.fidelity != "behavioral" and self.sync.mode != "optinc":
+            raise SpecError(
+                f"--fidelity {ph.fidelity} is an optinc-backend knob "
+                f"(the hardware-in-the-loop ONN path); got --sync "
+                f"{self.sync.mode}")
         if self.sync.bucket_bytes <= 0:
             raise SpecError(f"bucket_bytes must be > 0, "
                             f"got {self.sync.bucket_bytes}")
@@ -233,6 +247,10 @@ class RunSpec:
                         help="pod (level-2) axis size; 0 = auto (2 for "
                              "--sync cascade, else 1)")
         ap.add_argument("--bits", type=int, help="OptINC bit width B")
+        ap.add_argument("--fidelity", choices=FIDELITIES,
+                        help="optinc emulation depth: behavioral Q(mean) | "
+                             "trained dense ONN | MZI mesh emulator "
+                             "(repro.photonics)")
         ap.add_argument("--error-layers",
                         help="Table II key, e.g. '3,4,5,6' (ONN errors)")
         ap.add_argument("--error-feedback", action="store_true")
@@ -286,6 +304,9 @@ class RunSpec:
             sync_kw["mode"] = ns.pop("sync")
         if "bits" in ns:
             sync_kw["bits"] = ns.pop("bits")
+        if "fidelity" in ns:
+            sync_kw["photonics"] = dataclasses.replace(
+                self.sync.photonics, fidelity=ns.pop("fidelity"))
         if "bucket_mb" in ns:
             sync_kw["bucket_bytes"] = int(ns.pop("bucket_mb") * 2 ** 20)
         if "error_layers" in ns:

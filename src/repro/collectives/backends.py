@@ -16,9 +16,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core import error_model
 from ..core.cascade import extra_symbols
-from ..core.encoding import QuantSpec, compute_scale
+from ..photonics import error_model
+from ..photonics import runtime as ph_runtime
+from ..photonics.encoding import (QuantSpec, compute_scale, group_symbols,
+                                  pam4_decode, pam4_encode)
 from .registry import register_backend
 
 _F32_TINY = 1.1754944e-38  # jnp.finfo(jnp.float32).tiny
@@ -149,17 +151,61 @@ def _quantized_sync(flat, cfg, key, scatter_plan):
     return out, flat - local
 
 
+def _photonic_sync(flat, cfg, key):
+    """The hardware-in-the-loop OptINC path (fidelity = 'onn' | 'mesh').
+
+    Instead of computing Q(mean) directly in the integer domain, the
+    B-bit codes are PAM4-encoded, every peer's symbol stream is gathered
+    into the emulated optical fabric, the preprocessing unit P merges
+    and averages them (paper III-A), and the averaged-gradient symbols
+    come out of the in-network ONN — either its trained dense forward
+    pass ('onn') or the phase-programmed MZI mesh emulator itself
+    ('mesh', repro.photonics.mesh).  The whole path is ordinary traced
+    jax, so it jit-compiles inside ``sync_gradients``.
+    """
+    n = _axis_size(cfg.axes)
+    module = ph_runtime.get_module(cfg.photonics, cfg.bits, n)
+    scale = _shared_scale(flat, cfg)
+    u, q, safe, spec = _encode(flat, scale, cfg)
+    flat_u = u.reshape(-1)
+    # unit P, distributed: each transceiver groups its OWN PAM4 symbols
+    # into base-4 values locally and the fabric's average is an exact
+    # integer psum / N (bit-identical to gathering all N symbol streams
+    # and taking preprocess()'s mean, without the N x memory blowup)
+    sym = pam4_encode(flat_u, cfg.bits)                        # (L, M)
+    vals = group_symbols(sym, cfg.bits, module.cfg.k_inputs)   # (L, K)
+    total = vals.astype(jnp.float32)
+    for ax in cfg.axes:
+        total = lax.psum(total, ax)
+    a = total / n                                   # unit P output (L, K)
+    out_sym = module.symbols(a, fidelity=cfg.photonics.fidelity)
+    u_avg = pam4_decode(out_sym)                         # (L,) int32
+    if cfg.error_layers and key is not None:
+        spec_err = error_model.TABLE_II[tuple(cfg.error_layers)]
+        u_avg = error_model.inject(key, u_avg, spec_err, cfg.bits)
+    out = _decode(u_avg.reshape(u.shape) - spec.levels, safe, spec,
+                  flat.size)
+    local = _decode(q, safe, spec, flat.size)
+    return out, flat - local
+
+
 class OptincBackend:
     """Quantize -> integer in-network sum -> Q(mean) -> dequantize.
 
-    The TPU ICI analogue of the optical sum keeps the wire at symbol
-    width: reduce-scatter the B-bit codes in the narrowest integer type
-    holding the N-way sum, apply the ONN transfer function Q(mean) on the
-    scattered shard (eq. 3), all-gather the B-bit result.
+    ``cfg.photonics.fidelity`` selects the emulation depth: 'behavioral'
+    keeps the TPU ICI analogue of the optical sum at symbol width
+    (reduce-scatter the B-bit codes in the narrowest integer type holding
+    the N-way sum, apply the ONN transfer function Q(mean) on the
+    scattered shard (eq. 3), all-gather the B-bit result); 'onn' / 'mesh'
+    run the gathered symbol streams through the in-network ONN itself
+    (``_photonic_sync``).
     """
     name = "optinc"
 
     def sync(self, flat, cfg, key):
+        ph = getattr(cfg, "photonics", None)
+        if ph is not None and ph.fidelity != "behavioral":
+            return _photonic_sync(flat, cfg, key)
         n = _axis_size(cfg.axes)
         max_sum = (2 ** cfg.bits - 2) * n
         rs_dt = jnp.int16 if max_sum < 2 ** 15 else jnp.int32
@@ -190,6 +236,11 @@ class CascadeBackend:
             raise ValueError(
                 "cascade sync needs >= 2 mesh axes (level-2..., level-1), "
                 f"got {cfg.axes!r}; run with a (pod, data) mesh")
+        ph = getattr(cfg, "photonics", None)
+        if ph is not None and ph.fidelity != "behavioral":
+            raise ValueError(
+                "the cascade backend is behavioral-only; use mode='optinc' "
+                f"for fidelity={ph.fidelity!r}")
         lvl1_ax = cfg.axes[-1]
         lvl2_axes = cfg.axes[:-1]
         n1 = lax.axis_size(lvl1_ax)

@@ -19,6 +19,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..photonics.config import PhotonicsConfig
 from .bucketizer import (DEFAULT_BUCKET_BYTES, bucketize, flatten_concat,
                          make_layout, unbucketize)
 from .registry import get_backend
@@ -33,6 +34,10 @@ class SyncConfig:
     error_layers: tuple = ()         # Table II key, () = ideal ONN
     error_feedback: bool = False     # beyond-paper residual accumulation
     bucket_bytes: int = DEFAULT_BUCKET_BYTES  # fused-bucket wire payload
+    # emulation fidelity of the optinc backend: behavioral | onn | mesh
+    # (repro.photonics; 'onn'/'mesh' put the trained ONN / the MZI mesh
+    # emulator itself inside the jit-compiled collective)
+    photonics: PhotonicsConfig = PhotonicsConfig()
 
 
 def residual_size(leaves) -> int:

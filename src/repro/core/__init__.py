@@ -1,3 +1,6 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# Paper-core remainder.  The optical subsystem (encoding, ONN, MZI
+# programming + mesh emulator, training, area/error models) moved to
+# repro.photonics; the modules of that name left here are thin
+# deprecation re-export shims.  Still first-class here: cascade.py
+# (two-level carry-cascade math, eq. 8-10) and collective.py (the
+# pre-refactor import surface of repro.collectives).

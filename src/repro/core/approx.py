@@ -1,62 +1,9 @@
-"""Matrix approximation W_s ~= Sigma_a U_a (paper eq. 4-6, Fig. 4).
+"""DEPRECATED shim — moved to ``repro.photonics.approx``.
 
-A rectangular weight W (m x n) is partitioned into square s x s submatrices
-along its longer dimension (s = min(m, n)); each submatrix is approximated by
-
-    W_a = Sigma_a @ U_a,   U_a = U_s V_s^T  (orthogonal Procrustes),
-    d_i = argmin_d ||W_s^i - d * U_a^i||^2 = <W_s^i, U_a^i>   (U_a rows unit)
-
-which halves the MZI count (one mesh + one diagonal column instead of two
-meshes + a column). Implemented in jnp so it can run inside the training
-loop as a periodic projection (paper III-B).
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.approx`` directly.
 """
-from __future__ import annotations
-
-import jax.numpy as jnp
-import numpy as np
-
-
-def block_size(m: int, n: int) -> int:
-    s = min(m, n)
-    if m % s or n % s:
-        raise ValueError(f"matrix {m}x{n} not partitionable into {s}x{s} blocks")
-    return s
-
-
-def approx_block(ws: jnp.ndarray) -> jnp.ndarray:
-    """Sigma_a U_a approximation of one square block (eq. 4-6)."""
-    u, _, vt = jnp.linalg.svd(ws, full_matrices=False)
-    ua = u @ vt                      # orthogonal Procrustes solution
-    d = jnp.sum(ws * ua, axis=1)     # least-squares row scales (rows unit norm)
-    return d[:, None] * ua
-
-
-def approx_block_factors(ws: np.ndarray):
-    """Numpy variant returning (d, U_a) for hardware mapping."""
-    u, _, vt = np.linalg.svd(ws, full_matrices=False)
-    ua = u @ vt
-    d = np.sum(ws * ua, axis=1)
-    return d, ua
-
-
-def approx_matrix(w: jnp.ndarray) -> jnp.ndarray:
-    """Partition (horizontally or vertically, Fig. 4) and approximate every
-    block. Differentiable-safe (used as a projection, not in the loss)."""
-    m, n = w.shape
-    s = block_size(m, n)
-    if m == n:
-        return approx_block(w)
-    if m > n:   # tall: horizontal cuts -> stack of (s x n=s) blocks
-        blocks = w.reshape(m // s, s, n)
-        out = jnp.stack([approx_block(blocks[i]) for i in range(m // s)])
-        return out.reshape(m, n)
-    # wide: vertical cuts
-    blocks = w.reshape(m, n // s, s).transpose(1, 0, 2)
-    out = jnp.stack([approx_block(blocks[i]) for i in range(n // s)])
-    return out.transpose(1, 0, 2).reshape(m, n)
-
-
-def approx_error(w: jnp.ndarray) -> float:
-    """Relative Frobenius error of the approximation (diagnostic)."""
-    wa = approx_matrix(w)
-    return float(jnp.linalg.norm(w - wa) / jnp.maximum(jnp.linalg.norm(w), 1e-30))
+from ..photonics.approx import *  # noqa: F401,F403

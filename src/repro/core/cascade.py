@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from .encoding import num_symbols
+from ..photonics.encoding import num_symbols
 
 
 def expected(u: np.ndarray) -> np.ndarray:

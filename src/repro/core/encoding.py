@@ -1,157 +1,9 @@
-"""PAM4 gradient encoding/decoding and block quantization (paper eq. 2-3).
+"""DEPRECATED shim — moved to ``repro.photonics.encoding``.
 
-A B-bit quantized gradient value ``u`` (offset-binary unsigned integer) is
-encoded into ``M = ceil(B/2)`` PAM4 symbols (2 bits each, eq. 2):
-
-    I^(i) = floor(u / 4^(M-i)) mod 4,   i = 1..M   (i=1 is the MSB symbol)
-
-The OptINC behavioural target (eq. 3) is the quantized average
-
-    G_bar = Q( (1/N) * sum_n G_n )      with Q = round-to-nearest.
-
-Quantization is global/block max-abs scaling to signed B-bit, stored in
-offset-binary so that optical amplitudes are non-negative.
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.encoding`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-import math
-
-import jax
-import jax.numpy as jnp
-
-
-def num_symbols(bits: int) -> int:
-    """M = ceil(B/2) PAM4 symbols per B-bit value."""
-    return (bits + 1) // 2
-
-
-@dataclasses.dataclass(frozen=True)
-class QuantSpec:
-    """Block quantization spec. ``block`` is the flattened block size; 0 means
-    a single global scale (the paper's 'global block quantization')."""
-    bits: int = 8
-    block: int = 0
-
-    @property
-    def levels(self) -> int:
-        # symmetric signed range [-levels, +levels]
-        return 2 ** (self.bits - 1) - 1
-
-    @property
-    def offset(self) -> int:
-        return 2 ** (self.bits - 1)
-
-
-def _block_view(x: jnp.ndarray, block: int) -> jnp.ndarray:
-    flat = x.reshape(-1)
-    if block <= 0:
-        return flat.reshape(1, -1)
-    pad = (-flat.shape[0]) % block
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, block)
-
-
-def compute_scale(g: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
-    """Per-block max-abs scale, shape (num_blocks,)."""
-    blocks = _block_view(g, spec.block)
-    s = jnp.max(jnp.abs(blocks), axis=1)
-    return jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
-
-
-def quantize(g: jnp.ndarray, spec: QuantSpec, scale: jnp.ndarray | None = None):
-    """Float gradient -> offset-binary uint integers in [0, 2^B - 2].
-
-    Returns (u, scale). ``u`` has g's shape, int32.
-    """
-    g = g.astype(jnp.float32)
-    if scale is None:
-        scale = compute_scale(g, spec)
-    blocks = _block_view(g, spec.block)
-    q = jnp.round(blocks / scale[:, None] * spec.levels)
-    q = jnp.clip(q, -spec.levels, spec.levels).astype(jnp.int32)
-    u = q + spec.levels  # offset binary, in [0, 2*levels] = [0, 2^B - 2]
-    u = u.reshape(-1)[: g.size].reshape(g.shape)
-    return u, scale
-
-
-def dequantize(u: jnp.ndarray, scale: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
-    blocks = _block_view(u.astype(jnp.float32) - spec.levels, spec.block)
-    g = blocks * (scale[:, None] / spec.levels)
-    return g.reshape(-1)[: u.size].reshape(u.shape)
-
-
-def pam4_encode(u: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Offset-binary ints -> PAM4 symbols, appended axis of size M (eq. 2).
-
-    Symbol i=0 is the most significant (paper's i=1).
-    """
-    m = num_symbols(bits)
-    shifts = jnp.arange(m - 1, -1, -1, dtype=jnp.int32)  # 4^(M-i)
-    sym = (u[..., None] // (4 ** shifts)) % 4
-    return sym.astype(jnp.int32)
-
-
-def pam4_decode(sym: jnp.ndarray) -> jnp.ndarray:
-    """PAM4 symbols (last axis = M, MSB first) -> offset-binary ints."""
-    m = sym.shape[-1]
-    weights = 4 ** jnp.arange(m - 1, -1, -1, dtype=jnp.int32)
-    return jnp.sum(sym.astype(jnp.int32) * weights, axis=-1)
-
-
-def qmean(u_stack: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
-    """Eq. (3): Q(mean over server axis 0) in the integer domain."""
-    if n is None:
-        n = u_stack.shape[0]
-    total = jnp.sum(u_stack.astype(jnp.int32), axis=0)
-    return jnp.round(total.astype(jnp.float32) / n).astype(jnp.int32)
-
-
-def expected_avg_symbols(sym_stack: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Servers' PAM4 symbols (N, ..., M) -> symbols of Q(mean) — the ONN's
-    exact behavioural target."""
-    u = pam4_decode(sym_stack)
-    return pam4_encode(qmean(u), bits)
-
-
-# ------------------------- preprocessing unit P -------------------------
-
-def preprocess_group_size(bits: int, k: int) -> int:
-    """g = ceil(M/K): number of PAM4 symbols merged per ONN input."""
-    m = num_symbols(bits)
-    return math.ceil(m / k)
-
-
-def preprocess(sym_stack: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
-    """Unit P (paper III-A): merge each group of g consecutive symbols into a
-    base-4 value and average over the N servers.
-
-    sym_stack: (N, ..., M) -> A: (..., K), A_k in [0, 4^g - 1] step 1/N.
-    """
-    n = sym_stack.shape[0]
-    m = sym_stack.shape[-1]
-    g = preprocess_group_size(bits, k)
-    pad = k * g - m
-    if pad:
-        # zero-pad on the MSB side of the first group
-        zeros = jnp.zeros(sym_stack.shape[:-1] + (pad,), sym_stack.dtype)
-        sym_stack = jnp.concatenate([zeros, sym_stack], axis=-1)
-    grouped = sym_stack.reshape(sym_stack.shape[:-1] + (k, g))
-    w = 4 ** jnp.arange(g - 1, -1, -1, dtype=jnp.int32)
-    vals = jnp.sum(grouped * w, axis=-1)  # (N, ..., K)
-    return jnp.mean(vals.astype(jnp.float32), axis=0)
-
-
-def oracle_from_preprocessed(a: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
-    """Exact ONN transfer function: preprocessed inputs A (..., K) ->
-    PAM4 symbols (..., M) of the quantized average."""
-    g = preprocess_group_size(bits, k)
-    w = (4.0 ** g) ** jnp.arange(k - 1, -1, -1)
-    total = jnp.sum(a.astype(jnp.float32) * w, axis=-1)
-    u = jnp.round(total).astype(jnp.int32)
-    return pam4_encode(u, bits)
-
-
-def splitter(sym: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Unit T: broadcast the ONN output back to all N servers."""
-    return jnp.broadcast_to(sym[None], (n,) + sym.shape)
+from ..photonics.encoding import *  # noqa: F401,F403

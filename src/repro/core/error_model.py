@@ -1,56 +1,9 @@
-"""ONN error-injection model (paper Table II + Fig. 7a methodology).
+"""DEPRECATED shim — moved to ``repro.photonics.error_model``.
 
-When the approximated ONN is not exactly 100% accurate, it perturbs the
-integer averaged gradient with specific error values at specific relative
-frequencies. The paper injects those errors during end-to-end training to
-show the impact is negligible. The table below reproduces paper Table II.
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.error_model`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-
-@dataclasses.dataclass(frozen=True)
-class ErrorSpec:
-    """P(any error) = 1 - accuracy; conditional on an error, ``values`` are
-    drawn with probabilities ``ratios``."""
-    accuracy: float
-    values: tuple
-    ratios: tuple
-
-    @property
-    def p_error(self) -> float:
-        return 1.0 - self.accuracy
-
-
-# Paper Table II (scenario 4: B=16, N=4). Keys = approximated layer sets.
-TABLE_II = {
-    (4, 5, 6): ErrorSpec(1.0, (), ()),
-    (4, 5, 6, 7): ErrorSpec(0.9999986, (1, -1, -64), (0.45, 0.45, 0.10)),
-    (4, 5, 6, 7, 8): ErrorSpec(0.9999999, (1024,), (1.0,)),
-    (3, 4, 5, 6): ErrorSpec(0.9998891,
-                            (1, -1, 1024, -1024, -4),
-                            (0.495, 0.495, 0.0045, 0.0045, 0.001)),
-    (3, 4, 5, 6, 7): ErrorSpec(0.9999936,
-                               (4, -4, -16, 12),
-                               (0.3975, 0.3975, 0.17, 0.035)),
-}
-
-
-def inject(key: jax.Array, u_avg: jnp.ndarray, spec: ErrorSpec,
-           bits: int) -> jnp.ndarray:
-    """Inject Table-II integer errors into the averaged gradient ``u_avg``
-    (offset-binary ints). Vectorized over the whole tensor."""
-    if not spec.values:
-        return u_avg
-    k1, k2 = jax.random.split(key)
-    hit = jax.random.bernoulli(k1, spec.p_error, u_avg.shape)
-    vals = jnp.asarray(spec.values, jnp.int32)
-    probs = jnp.asarray(spec.ratios, jnp.float32)
-    which = jax.random.categorical(k2, jnp.log(probs), shape=u_avg.shape)
-    err = vals[which]
-    out = u_avg + jnp.where(hit, err, 0)
-    return jnp.clip(out, 0, 2 ** bits - 2)
+from ..photonics.error_model import *  # noqa: F401,F403

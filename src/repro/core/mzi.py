@@ -1,100 +1,9 @@
-"""MZI hardware model: interleaving arrays, Givens decomposition, programming.
+"""DEPRECATED shim — moved to ``repro.photonics.mzi``.
 
-An M x M real orthogonal matrix is realized by M(M-1)/2 MZIs (paper Fig. 2,
-the interleaving/Clements arrangement). Each MZI acting on waveguides (i, j)
-implements a 2x2 rotation parameterized by its phase shifters; the real
-restriction of the unitary group that the mesh generates is exactly the set
-of Givens rotations, so programming the mesh == Givens decomposition.
-
-The diagonal Sigma of an SVD (or the Sigma_a of the paper's approximation)
-is realized by one column of M MZIs used as attenuators.
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.mzi`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-
-import numpy as np
-
-
-@dataclasses.dataclass
-class MZIProgram:
-    """Phase program for one orthogonal matrix on an M-port mesh."""
-    dim: int
-    # list of (i, j, theta): rotation in the (i, j) plane
-    rotations: list
-    # output sign flips (absorbed into the diagonal column / output phases)
-    signs: np.ndarray
-
-    @property
-    def num_mzis(self) -> int:
-        return self.dim * (self.dim - 1) // 2
-
-
-def givens_decompose(o: np.ndarray, tol: float = 1e-9) -> MZIProgram:
-    """Decompose real orthogonal ``o`` into M(M-1)/2 Givens rotations.
-
-    o = diag(signs) @ prod(R(i,j,theta))  (product applied right-to-left)
-    """
-    o = np.asarray(o, dtype=np.float64)
-    m = o.shape[0]
-    assert o.shape == (m, m)
-    if not np.allclose(o @ o.T, np.eye(m), atol=1e-6):
-        raise ValueError("matrix is not orthogonal")
-    work = o.copy()
-    rotations = []
-    # zero out sub-diagonal entries column by column (QR with Givens)
-    for col in range(m - 1):
-        for row in range(m - 1, col, -1):
-            a, b = work[row - 1, col], work[row, col]
-            if abs(b) < tol:
-                continue
-            theta = np.arctan2(b, a)
-            c, s = np.cos(theta), np.sin(theta)
-            g = np.eye(m)
-            g[row - 1, row - 1] = c
-            g[row - 1, row] = s
-            g[row, row - 1] = -s
-            g[row, row] = c
-            work = g @ work
-            rotations.append((row - 1, row, float(theta)))
-    signs = np.sign(np.diag(work))
-    signs[signs == 0] = 1.0
-    if not np.allclose(np.diag(signs) @ work, np.eye(m), atol=1e-6):
-        raise ValueError("Givens elimination failed to reach identity")
-    # o = (prod G_k)^{-1} diag(signs) => o = G_1^T ... G_K^T diag(signs)
-    return MZIProgram(dim=m, rotations=rotations, signs=signs)
-
-
-def reconstruct(program: MZIProgram) -> np.ndarray:
-    """Rebuild the orthogonal matrix from the MZI phase program."""
-    m = program.dim
-    # elimination gave: G_K ... G_1 @ o = diag(signs)
-    #   =>  o = G_1^T ... G_K^T @ diag(signs)
-    acc = np.diag(program.signs.astype(np.float64))
-    for (i, j, theta) in reversed(program.rotations):
-        c, s = np.cos(theta), np.sin(theta)
-        g = np.eye(m)
-        g[i, i] = c
-        g[i, j] = s
-        g[j, i] = -s
-        g[j, j] = c
-        acc = g.T @ acc
-    return acc
-
-
-def program_matrix_svd(w: np.ndarray):
-    """Program an arbitrary real matrix W = U S V^T onto two meshes + one
-    diagonal column (paper eq. 1). Returns (prog_u, sigma, prog_v)."""
-    u, s, vt = np.linalg.svd(w)
-    return givens_decompose(u), s, givens_decompose(vt.T)
-
-
-def apply_programmed_svd(prog_u: MZIProgram, sigma: np.ndarray,
-                         prog_v: MZIProgram, x: np.ndarray) -> np.ndarray:
-    """Optical forward pass through the programmed SVD mesh: W x."""
-    u = reconstruct(prog_u)
-    v = reconstruct(prog_v)
-    m, n = u.shape[0], v.shape[0]
-    s = np.zeros((m, n))
-    s[: len(sigma), : len(sigma)] = np.diag(sigma)
-    return u @ (s @ (v.T @ x))
+from ..photonics.mzi import *  # noqa: F401,F403

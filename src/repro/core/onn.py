@@ -1,140 +1,9 @@
-"""The ONN f_theta: an MLP with ReLU activations (paper IV) whose linear
-layers are MZI-implementable. Dense weights are used during training; the
-matrix-approximation projection (approx.approx_matrix) is applied
-periodically and enforced at mapping time (paper III-B).
+"""DEPRECATED shim — moved to ``repro.photonics.onn``.
 
-Inputs are the preprocessed signals A_k scaled to [0, 1]; outputs are M
-analog values that the transceivers quantize to the nearest PAM4 level.
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.onn`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import approx as approx_mod
-from . import area as area_mod
-from . import mzi as mzi_mod
-
-
-@dataclasses.dataclass(frozen=True)
-class ONNConfig:
-    structure: tuple  # e.g. (4, 64, 128, 256, 128, 64, 4)
-    approx_layers: tuple = ()  # 1-based layer indices to approximate
-    bits: int = 8              # B: gradient bit width
-    n_servers: int = 4         # N
-    k_inputs: int = 4          # K (ONN input size after the P unit)
-
-    @property
-    def in_scale(self) -> float:
-        """A_k ranges over [0, 4^g - 1]; normalize to [0, 1]."""
-        from .encoding import preprocess_group_size
-        g = preprocess_group_size(self.bits, self.k_inputs)
-        return float(4 ** g - 1)
-
-    @property
-    def out_scale(self) -> float:
-        return 3.0  # PAM4 symbol levels {0,1,2,3}
-
-
-def init_params(cfg: ONNConfig, rng: jax.Array):
-    params = []
-    dims = area_mod.layer_dims(list(cfg.structure))
-    keys = jax.random.split(rng, len(dims))
-    for key, (m, n) in zip(keys, dims):
-        w = jax.random.normal(key, (m, n), jnp.float32) * jnp.sqrt(2.0 / n)
-        b = jnp.zeros((m,), jnp.float32)
-        params.append({"w": w, "b": b})
-    return params
-
-
-def apply(params, a: jnp.ndarray, cfg: ONNConfig) -> jnp.ndarray:
-    """Forward pass. a: (..., K) raw preprocessed inputs -> (..., M) analog
-    outputs in symbol units (approximately {0..3})."""
-    x = a.astype(jnp.float32) / cfg.in_scale
-    n_layers = len(params)
-    for i, layer in enumerate(params):
-        x = x @ layer["w"].T + layer["b"]
-        if i < n_layers - 1:
-            x = jax.nn.relu(x)
-    return x * cfg.out_scale
-
-
-def project_approx(params, cfg: ONNConfig):
-    """Apply the matrix approximation to the selected layers (projection
-    step of the hardware-aware training, paper III-B)."""
-    out = []
-    for idx, layer in enumerate(params, start=1):
-        if idx in cfg.approx_layers:
-            out.append({"w": approx_mod.approx_matrix(layer["w"]), "b": layer["b"]})
-        else:
-            out.append(layer)
-    return out
-
-
-def readout(outputs: jnp.ndarray) -> jnp.ndarray:
-    """Transceiver model: quantize analog outputs to the nearest PAM4 level."""
-    return jnp.clip(jnp.round(outputs), 0, 3).astype(jnp.int32)
-
-
-def area_ratio(cfg: ONNConfig) -> float:
-    return area_mod.area_ratio(list(cfg.structure), set(cfg.approx_layers))
-
-
-# ---------------- hardware mapping (MZI programming) ----------------
-
-def map_to_hardware(params, cfg: ONNConfig):
-    """Program every layer onto MZI meshes. Approximated layers use the
-    Sigma_a U_a form (one mesh + diag); others use full SVD (two meshes).
-    Returns a list of per-layer hardware programs."""
-    hw = []
-    for idx, layer in enumerate(params, start=1):
-        w = np.asarray(layer["w"], np.float64)
-        m, n = w.shape
-        if idx in cfg.approx_layers:
-            s = approx_mod.block_size(m, n)
-            blocks = []
-            if m >= n:
-                parts = w.reshape(m // s, s, n)
-            else:
-                parts = w.reshape(m, n // s, s).transpose(1, 0, 2)
-            for ws in parts:
-                d, ua = approx_mod.approx_block_factors(ws)
-                blocks.append({"d": d, "u": mzi_mod.givens_decompose(ua)})
-            hw.append({"kind": "approx", "blocks": blocks, "shape": (m, n),
-                       "b": np.asarray(layer["b"])})
-        else:
-            pu, s, pv = mzi_mod.program_matrix_svd(w)
-            hw.append({"kind": "svd", "u": pu, "sigma": s, "v": pv,
-                       "shape": (m, n), "b": np.asarray(layer["b"])})
-    return hw
-
-
-def apply_hardware(hw, a: np.ndarray, cfg: ONNConfig) -> np.ndarray:
-    """Numpy forward pass through the programmed MZI meshes — validates that
-    the mapping preserves the trained function."""
-    x = np.asarray(a, np.float64) / cfg.in_scale
-    for li, layer in enumerate(hw):
-        m, n = layer["shape"]
-        if layer["kind"] == "svd":
-            y = mzi_mod.apply_programmed_svd(layer["u"], layer["sigma"],
-                                             layer["v"], x.T).T
-        else:
-            s = min(m, n)
-            if m >= n:
-                parts = [b for b in layer["blocks"]]
-                ys = [ (mzi_mod.reconstruct(p["u"]) @ x.T).T * p["d"] for p in parts ]
-                y = np.concatenate(ys, axis=-1)
-            else:
-                xs = x.reshape(x.shape[:-1] + (n // s, s))
-                y = 0.0
-                for j, p in enumerate(layer["blocks"]):
-                    y = y + (mzi_mod.reconstruct(p["u"]) @ xs[..., j, :].T).T * p["d"]
-        y = y + layer["b"]
-        if li < len(hw) - 1:
-            y = np.maximum(y, 0.0)
-        x = y
-    return x * cfg.out_scale
+from ..photonics.onn import *  # noqa: F401,F403

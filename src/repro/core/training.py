@@ -1,288 +1,9 @@
-"""Hardware-aware ONN training (paper III-B, eq. 7).
+"""DEPRECATED shim — moved to ``repro.photonics.training``.
 
-Two-stage loss:
-  stage 1 (E < E1):  per-symbol weighted MSE on the raw analog outputs.
-                     W_T^(i) weights MSB symbols more; the paper leaves the
-                     exact values unspecified — ``weight_mode`` selects
-                     uniform / 2^(M-i) / 4^(M-i) (uniform converges best in
-                     our reproduction; see EXPERIMENTS.md §Table1).
-  stage 2 (E >= E1): MSE on the reconstructed gradient G_bar from
-                     transceiver-quantized outputs (straight-through
-                     estimator keeps rounding trainable).
-
-Hardware constraint (matrix approximation) is enforced two ways:
-  mode='project' — the paper's algorithm: periodically project the selected
-                   layers onto the Sigma_a U_a manifold, enforce at the end.
-  mode='cayley'  — beyond-paper: parametrize the selected layers *exactly*
-                   as diag(d) @ cayley(P - P^T) per block, so the trained
-                   network is hardware-exact by construction (no projection
-                   error to recover from).
+The optical subsystem now lives in the ``repro.photonics`` package
+(one device-resident home for encoding, the ONN, MZI programming, the
+jittable mesh emulator, and the area/error models).  This module
+re-exports that surface for pre-refactor importers; new code should
+import ``repro.photonics.training`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import approx as approx_mod
-from . import onn as onn_mod
-from .onn import ONNConfig
-
-
-@dataclasses.dataclass
-class TrainConfig:
-    epochs: int = 4000
-    e1: int = 3000               # stage-1 epoch count
-    lr: float = 1e-2
-    batch_size: int = 0          # 0 = full batch
-    proj_every: int = 100        # approximation projection period (project mode)
-    mode: str = "project"        # project | cayley
-    weight_mode: str = "uniform"  # uniform | pow2 | pow4
-    seed: int = 0
-    cosine: bool = True
-
-
-def symbol_weights(m: int, mode: str) -> jnp.ndarray:
-    if mode == "uniform":
-        w = jnp.ones((m,))
-    elif mode == "pow2":
-        w = 2.0 ** jnp.arange(m - 1, -1, -1)
-    elif mode == "pow4":
-        w = 4.0 ** jnp.arange(m - 1, -1, -1)
-    else:
-        raise ValueError(mode)
-    return w / jnp.sum(w)
-
-
-def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
-    return x + jax.lax.stop_gradient(jnp.clip(jnp.round(x), 0, 3) - x)
-
-
-# ----------------- Cayley-constrained parametrization -----------------
-
-def _cayley(p: jnp.ndarray) -> jnp.ndarray:
-    """Skew-symmetrize the free matrix and map to the orthogonal group."""
-    a = p - jnp.swapaxes(p, -1, -2)
-    eye = jnp.eye(a.shape[-1], dtype=a.dtype)
-    return jnp.linalg.solve(eye + a, eye - a)
-
-
-def init_constrained_layer(key, m: int, n: int):
-    s = approx_mod.block_size(m, n)
-    nblocks = (m // s) * (n // s)
-    k1, k2 = jax.random.split(key)
-    p = jax.random.normal(k1, (nblocks, s, s), jnp.float32) * 0.1
-    d = jax.random.normal(k2, (nblocks, s), jnp.float32) * jnp.sqrt(2.0 / n)
-    return {"p": p, "d": d, "b": jnp.zeros((m,), jnp.float32),
-            "shape": (m, n)}
-
-
-def materialize_constrained(layer) -> jnp.ndarray:
-    """Build W (m x n) from the exact diag(d) @ U block parametrization."""
-    m, n = layer["shape"]
-    s = approx_mod.block_size(m, n)
-    u = _cayley(layer["p"])                      # (nblocks, s, s)
-    w_blocks = layer["d"][..., None] * u         # diag(d) @ U
-    if m == n:
-        return w_blocks[0]
-    if m > n:
-        return w_blocks.reshape(m, n)
-    return w_blocks.transpose(1, 0, 2).reshape(m, n)
-
-
-def init_params(cfg: ONNConfig, rng, mode: str):
-    """Dense params, with approximated layers replaced by the constrained
-    parametrization when mode == 'cayley'."""
-    dense = onn_mod.init_params(cfg, rng)
-    if mode != "cayley":
-        return dense
-    keys = jax.random.split(rng, len(dense))
-    out = []
-    for idx, (layer, key) in enumerate(zip(dense, keys), start=1):
-        if idx in cfg.approx_layers:
-            m, n = layer["w"].shape
-            out.append(init_constrained_layer(key, m, n))
-        else:
-            out.append(layer)
-    return out
-
-
-def apply_onn(params, a, cfg: ONNConfig):
-    """Forward pass that understands both layer parametrizations."""
-    x = a.astype(jnp.float32) / cfg.in_scale
-    nl = len(params)
-    for i, layer in enumerate(params):
-        w = layer["w"] if "w" in layer else materialize_constrained(layer)
-        x = x @ w.T + layer["b"]
-        if i < nl - 1:
-            x = jax.nn.relu(x)
-    return x * cfg.out_scale
-
-
-def to_dense(params):
-    """Materialize any constrained layers into plain dense weights."""
-    out = []
-    for layer in params:
-        if "w" in layer:
-            out.append(layer)
-        else:
-            out.append({"w": materialize_constrained(layer), "b": layer["b"]})
-    return out
-
-
-# ------------------------------ losses ------------------------------
-
-def stage1_loss(params, a, tgt, cfg: ONNConfig, w_sym):
-    out = apply_onn(params, a, cfg)
-    return jnp.mean(jnp.sum(w_sym * (out - tgt.astype(jnp.float32)) ** 2, -1))
-
-
-def stage2_loss(params, a, tgt, cfg: ONNConfig, w_sym):
-    out = apply_onn(params, a, cfg)
-    m = out.shape[-1]
-    place = 4.0 ** jnp.arange(m - 1, -1, -1)
-    g_hat = jnp.sum(_ste_round(out) * place, -1)
-    g_star = jnp.sum(tgt.astype(jnp.float32) * place, -1)
-    scale = 4.0 ** m - 1.0
-    # keep a small symbol-level anchor so stage 2 cannot drift symbols that
-    # currently round correctly (zero STE gradient regions)
-    anchor = jnp.mean(jnp.sum(w_sym * (out - tgt.astype(jnp.float32)) ** 2, -1))
-    return jnp.mean(((g_hat - g_star) / scale) ** 2) + 0.1 * anchor
-
-
-# ----------------------------- metrics ------------------------------
-
-def accuracy(params, a, tgt, cfg: ONNConfig, batch: int = 262144) -> float:
-    """Fraction of samples whose entire reconstructed gradient is exact
-    (all M symbols round correctly) — the paper's 'ONN Accuracy'."""
-    params = to_dense(params)
-    n = a.shape[0]
-    correct = 0
-    fwd = jax.jit(partial(apply_onn, cfg=cfg))
-    for i in range(0, n, batch):
-        sym = onn_mod.readout(fwd(params, jnp.asarray(a[i:i + batch])))
-        correct += int(jnp.sum(jnp.all(sym == jnp.asarray(tgt[i:i + batch]), -1)))
-    return correct / n
-
-
-def error_histogram(params, a, tgt, cfg: ONNConfig, batch: int = 262144):
-    """Integer-error distribution of the reconstructed gradient on the
-    misclassified samples (paper Table II col 3)."""
-    params = to_dense(params)
-    m = tgt.shape[-1]
-    place = 4 ** np.arange(m - 1, -1, -1)
-    errs = {}
-    fwd = jax.jit(partial(apply_onn, cfg=cfg))
-    for i in range(0, a.shape[0], batch):
-        sym = np.asarray(onn_mod.readout(fwd(params, jnp.asarray(a[i:i + batch]))))
-        g_hat = (sym * place).sum(-1)
-        g_star = (np.asarray(tgt[i:i + batch]) * place).sum(-1)
-        for e in (g_hat - g_star)[g_hat != g_star]:
-            errs[int(e)] = errs.get(int(e), 0) + 1
-    return errs
-
-
-# ----------------------------- optimizer ----------------------------
-
-def _adam_init(params):
-    return {"m": jax.tree.map(jnp.zeros_like, params),
-            "v": jax.tree.map(jnp.zeros_like, params),
-            "t": jnp.zeros((), jnp.int32)}
-
-
-def _adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
-    t = state["t"] + 1
-    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
-    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
-    mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
-    vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
-    params = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
-                          params, mhat, vhat)
-    return params, {"m": m, "v": v, "t": t}
-
-
-# ------------------------------ driver ------------------------------
-
-def train(cfg: ONNConfig, tcfg: TrainConfig, a: np.ndarray, tgt: np.ndarray,
-          eval_every: int = 0, verbose: bool = False, target_acc: float = 1.0):
-    """Hardware-aware training loop. Returns (params, history). The returned
-    params always satisfy the hardware constraint on cfg.approx_layers."""
-    rng = jax.random.PRNGKey(tcfg.seed)
-    params = init_params(cfg, rng, tcfg.mode)
-    m_out = cfg.structure[-1]
-    w_sym = symbol_weights(m_out, tcfg.weight_mode)
-
-    # static "shape" fields must not be traced through jit
-    def split_static(p):
-        dyn = [ {k: v for k, v in l.items() if k != "shape"} for l in p ]
-        return dyn
-
-    shapes = [l.get("shape") for l in params]
-
-    def with_shapes(dyn):
-        return [dict(l, shape=s) if s is not None else l
-                for l, s in zip(dyn, shapes)]
-
-    @partial(jax.jit, static_argnames=("stage",))
-    def step(dyn, opt, ab, tb, lr, stage):
-        def loss_fn(dyn):
-            p = with_shapes(dyn)
-            f = stage1_loss if stage == 1 else stage2_loss
-            return f(p, ab, tb, cfg, w_sym)
-        loss, grads = jax.value_and_grad(loss_fn)(dyn)
-        dyn, opt = _adam_update(dyn, grads, opt, lr)
-        return dyn, opt, loss
-
-    n = a.shape[0]
-    bs = tcfg.batch_size if tcfg.batch_size > 0 else n
-    steps = max(1, n // bs)
-    history = []
-    perm_rng = np.random.default_rng(tcfg.seed)
-    a_j, t_j = jnp.asarray(a), jnp.asarray(tgt)
-    dyn = split_static(params)
-    opt = _adam_init(dyn)
-    for epoch in range(tcfg.epochs):
-        stage = 1 if epoch < tcfg.e1 else 2
-        lr = tcfg.lr
-        if tcfg.cosine:
-            lr = tcfg.lr * 0.5 * (1 + np.cos(np.pi * epoch / tcfg.epochs))
-        if steps == 1:
-            dyn, opt, loss = step(dyn, opt, a_j, t_j, lr, stage)
-            ep_loss = float(loss)
-        else:
-            perm = perm_rng.permutation(n)
-            ep_loss = 0.0
-            for s in range(steps):
-                idx = jnp.asarray(perm[s * bs:(s + 1) * bs])
-                dyn, opt, loss = step(dyn, opt, a_j[idx], t_j[idx], lr, stage)
-                ep_loss += float(loss) / steps
-        projected = False
-        if (tcfg.mode == "project" and cfg.approx_layers
-                and (epoch + 1) % tcfg.proj_every == 0):
-            p_full = with_shapes(dyn)
-            p_full = onn_mod.project_approx(p_full, cfg)
-            dyn = split_static(p_full)
-            projected = True
-        rec = {"epoch": epoch, "stage": stage, "loss": ep_loss,
-               "projected": projected, "lr": lr}
-        if eval_every and (epoch + 1) % eval_every == 0:
-            p_eval = with_shapes(dyn)
-            if tcfg.mode == "project" and cfg.approx_layers:
-                p_eval = onn_mod.project_approx(p_eval, cfg)
-            rec["acc"] = accuracy(p_eval, a, tgt, cfg)
-            if verbose:
-                print(f"epoch {epoch:5d} stage {stage} loss {ep_loss:.3e} "
-                      f"acc {rec['acc']:.6f}", flush=True)
-            if rec["acc"] >= target_acc:
-                history.append(rec)
-                dyn = split_static(p_eval)
-                break
-        history.append(rec)
-    params = with_shapes(dyn)
-    if tcfg.mode == "project" and cfg.approx_layers:
-        params = onn_mod.project_approx(params, cfg)
-    params = to_dense(params)
-    return params, history
+from ..photonics.training import *  # noqa: F401,F403

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..photonics.config import resolve_interpret
+
 
 def _onn_layer_kernel(x_ref, ut_ref, d_ref, b_ref, y_ref, acc_ref, *,
                       relu: bool, k_steps: int):
@@ -35,10 +37,12 @@ def _onn_layer_kernel(x_ref, ut_ref, d_ref, b_ref, y_ref, acc_ref, *,
 
 def onn_layer(x: jnp.ndarray, u: jnp.ndarray, d: jnp.ndarray, b: jnp.ndarray,
               relu: bool = True, blk_b: int = 128, blk_m: int = 128,
-              blk_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+              blk_k: int = 128, interpret: bool | None = None) -> jnp.ndarray:
     """x: (batch, n), u: (m, n) orthogonal block row, d/b: (m,).
 
-    Tiles must divide the (padded) operands; the ops.py wrapper pads."""
+    Tiles must divide the (padded) operands; the ops.py wrapper pads.
+    ``interpret=None`` auto-detects (compiled only on TPU)."""
+    interpret = resolve_interpret(interpret)
     batch, n = x.shape
     m = u.shape[0]
     blk_b = min(blk_b, batch)

@@ -27,15 +27,15 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("bits",))
 def pam4_quantize_encode(g, scale, bits: int = 8):
     if _on_tpu():
-        return pam4_k.pam4_quantize_encode(g, scale, bits, interpret=False)
+        # interpret=None auto-resolves to compiled on TPU
+        return pam4_k.pam4_quantize_encode(g, scale, bits)
     return ref.pam4_quantize_encode_ref(g, scale, bits, g.shape[-1])
 
 
 @partial(jax.jit, static_argnames=("bits", "n"))
 def pam4_decode_dequantize(total, scale, bits: int, n: int):
     if _on_tpu():
-        return pam4_k.pam4_decode_dequantize(total, scale, bits, n,
-                                             interpret=False)
+        return pam4_k.pam4_decode_dequantize(total, scale, bits, n)
     u_avg = ref.pam4_qmean_ref(total, n)
     return ref.pam4_decode_dequantize_ref(u_avg, scale, bits)
 
@@ -45,7 +45,7 @@ def pam4_decode_dequantize(total, scale, bits: int, n: int):
 @partial(jax.jit, static_argnames=("relu",))
 def onn_layer(x, u, d, b, relu: bool = True):
     if _on_tpu():
-        return onn_k.onn_layer(x, u, d, b, relu=relu, interpret=False)
+        return onn_k.onn_layer(x, u, d, b, relu=relu)
     return ref.onn_layer_ref(x, u, d, b, relu=relu)
 
 

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..photonics.config import resolve_interpret
+
 
 def _encode_kernel(g_ref, scale_ref, u_ref, *, levels: int):
     g = g_ref[...]
@@ -36,8 +38,12 @@ def _decode_kernel(u_ref, scale_ref, g_ref, *, levels: int, n: int):
 
 
 def pam4_quantize_encode(g: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                         blk_r: int = 8, interpret: bool = True):
-    """g: (nblocks, block) fp32, scale: (nblocks,) -> int32 offset-binary."""
+                         blk_r: int = 8, interpret: bool | None = None):
+    """g: (nblocks, block) fp32, scale: (nblocks,) -> int32 offset-binary.
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpreted
+    elsewhere — photonics.resolve_interpret)."""
+    interpret = resolve_interpret(interpret)
     levels = 2 ** (bits - 1) - 1
     nblocks, block = g.shape
     assert nblocks % blk_r == 0, (nblocks, blk_r)
@@ -56,10 +62,13 @@ def pam4_quantize_encode(g: jnp.ndarray, scale: jnp.ndarray, bits: int,
 
 
 def pam4_decode_dequantize(total: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                           n: int, blk_r: int = 8, interpret: bool = True):
+                           n: int, blk_r: int = 8,
+                           interpret: bool | None = None):
     """Fused Q(mean) + dequantize of the integer all-reduce result.
 
-    total: (nblocks, block) int32 sum over N peers; returns fp32 gradients."""
+    total: (nblocks, block) int32 sum over N peers; returns fp32 gradients.
+    ``interpret=None`` auto-detects (compiled only on TPU)."""
+    interpret = resolve_interpret(interpret)
     levels = 2 ** (bits - 1) - 1
     nblocks, block = total.shape
     assert nblocks % blk_r == 0

@@ -9,6 +9,13 @@
   PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
       --smoke-config --sync cascade --mesh 2x1 --bucket-mb 4
 
+  # hardware-in-the-loop: the MZI mesh emulator computes the averaged
+  # gradient inside the jitted step (--fidelity onn uses the dense ONN;
+  # bits<=2 resolves the built-in exact identity ONN, wider bit widths
+  # need trained params — see repro.photonics.runtime)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync optinc --bits 2 --fidelity mesh
+
   # or describe the whole scenario declaratively:
   PYTHONPATH=src python -m repro.launch.train --spec my_run.json
 

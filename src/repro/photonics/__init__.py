@@ -1,0 +1,37 @@
+"""repro.photonics — the optical subsystem, in one place.
+
+The paper's device story (PAM4 encoding -> preprocessing unit P ->
+MZI-implementable ONN -> transceiver readout) used to be scattered
+across ``repro.core``; this package is its single home, split by layer:
+
+  encoding.py     PAM4 symbols, block quantization, the P unit (eq. 2-3)
+  onn.py          the ONN f_theta + ONNConfig + Transceiver (paper IV)
+  approx.py       Sigma_a U_a matrix approximation (eq. 4-6)
+  mzi.py          Givens programming of MZI meshes — numpy ORACLE
+  mesh.py         vectorized jittable mesh EMULATOR (lax.scan layers)
+  area.py         MZI area-cost model (Tables I/II)
+  training.py     hardware-aware two-stage training (III-B, eq. 7)
+  dataset.py      ONN training grids (III-A/III-C)
+  error_model.py  Table-II error injection
+  module.py       ONNModule: params + compiled mesh programs, per fidelity
+  config.py       PhotonicsConfig: the runtime fidelity knob
+  runtime.py      cached ONN resolution for the collective engine
+
+``repro.core.{onn,mzi,approx,training,error_model,encoding,area,dataset}``
+re-export this surface for backwards compatibility.
+"""
+from . import (approx, area, dataset, encoding, error_model, mesh, mzi, onn,
+               training)
+from .config import FIDELITIES, PhotonicsConfig, resolve_interpret
+from .mesh import MZIMesh, compile_hardware
+from .module import ONNModule
+from .onn import ONNConfig, Transceiver
+from .runtime import get_module, put_module, warmup
+
+__all__ = [
+    "PhotonicsConfig", "FIDELITIES", "resolve_interpret",
+    "ONNConfig", "ONNModule", "MZIMesh", "Transceiver",
+    "compile_hardware", "get_module", "put_module", "warmup",
+    "approx", "area", "dataset", "encoding", "error_model", "mesh", "mzi",
+    "onn", "training",
+]

@@ -1,0 +1,69 @@
+"""PhotonicsConfig: the runtime fidelity knob of the optical subsystem.
+
+One frozen, JSON-round-trippable dataclass describes how faithfully the
+collective engine emulates the in-network ONN:
+
+  fidelity='behavioral'  Q(mean) computed directly in the integer domain
+                         (paper eq. 3) — the fastest path, bit-exact by
+                         definition.
+  fidelity='onn'         the PAM4 symbol stream runs through the trained
+                         dense ONN (onn.apply + transceiver readout), so
+                         the learned approximation of eq. 3 sits in the
+                         training loop.
+  fidelity='mesh'        the phase-programmed MZI mesh emulator itself
+                         (mesh.py: Givens layers under lax.scan) computes
+                         every linear layer — emulated hardware in the
+                         loop, still jit-compiled.
+
+``SyncConfig.photonics`` carries this config into the optinc backend;
+``RunSpec`` threads it from ``--fidelity`` (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+FIDELITIES = ("behavioral", "onn", "mesh")
+
+PARAM_SOURCES = ("auto", "exact", "results", "train")
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """Pallas ``interpret`` auto-detection: compiled on TPU, interpreted
+    everywhere else.  An explicit True/False always wins."""
+    if flag is not None:
+        return bool(flag)
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicsConfig:
+    """Optical-subsystem runtime knobs (all JSON-serializable).
+
+    ``structure``/``approx_layers`` describe the in-network ONN used by the
+    ``onn``/``mesh`` fidelities; ``()`` derives a default from the sync bit
+    width (see ``runtime.default_structure``).  ``params`` selects where
+    the trained weights come from:
+
+      'exact'    analytically exact identity ONN — only possible when the
+                 transfer function is linear, i.e. one PAM4 symbol per
+                 value and one ONN input (bits <= 2, k_inputs == 1)
+      'results'  results/scenario1*_params.pkl (quickstart --onn output)
+      'train'    hardware-aware training at resolve time (train_epochs)
+      'auto'     exact if possible, else results, else error with guidance
+    """
+    fidelity: str = "behavioral"
+    structure: tuple = ()          # () = auto from bits/k_inputs
+    approx_layers: tuple = ()
+    k_inputs: int = 4              # K (clamped to the symbol count M)
+    params: str = "auto"           # auto | exact | results | train
+    train_epochs: int = 0          # 'train' source budget (0 = refuse)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(f"fidelity must be one of {FIDELITIES}, "
+                             f"got {self.fidelity!r}")
+        if self.params not in PARAM_SOURCES:
+            raise ValueError(f"params must be one of {PARAM_SOURCES}, "
+                             f"got {self.params!r}")

@@ -1,0 +1,123 @@
+"""ONNModule: one in-network ONN as a device-ready object.
+
+Bundles the ``ONNConfig``, the trained dense parameters, and (lazily)
+the phase-programmed mesh emulation of those parameters, behind the
+three fidelity levels the collective engine exposes:
+
+    module.apply(a)        dense jax forward pass (fidelity='onn')
+    module.apply_mesh(a)   compiled MZI-mesh emulator (fidelity='mesh')
+    module.symbols(a, ...) either of the above + transceiver readout
+
+``map_to_hardware`` (Givens programming) runs once, at first use; the
+compiled ``mesh.py`` programs are cached on the module and jit-friendly
+(closed over as constants inside ``sync_gradients``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import mesh as mesh_mod
+from . import onn as onn_mod
+from .encoding import num_symbols
+from .onn import ONNConfig, Transceiver
+
+
+@dataclasses.dataclass
+class ONNModule:
+    cfg: ONNConfig
+    params: list                       # dense layer dicts ({"w", "b"})
+    transceiver: Transceiver = dataclasses.field(default_factory=Transceiver)
+    _programs: list | None = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def init(cls, cfg: ONNConfig, rng) -> "ONNModule":
+        return cls(cfg, onn_mod.init_params(cfg, rng))
+
+    @classmethod
+    def from_params(cls, cfg: ONNConfig, params) -> "ONNModule":
+        # numpy storage: modules may be resolved inside a jit/shard_map
+        # trace, where jnp constructors would produce tracers; numpy
+        # params stay concrete and lower as constants
+        return cls(cfg, [{"w": np.asarray(l["w"], np.float32),
+                          "b": np.asarray(l["b"], np.float32)}
+                         for l in params])
+
+    @classmethod
+    def exact_identity(cls, bits: int, n_servers: int) -> "ONNModule":
+        """Analytically exact ONN for the single-symbol transfer function.
+
+        With M = num_symbols(bits) == 1 and K = 1 the behavioural target
+        Q(mean) is just round(A), so a (1, 4, 1) identity network (positive
+        weights keep ReLU transparent on A >= 0) + transceiver rounding IS
+        the oracle — 100% accuracy by construction, no training needed.
+
+        Exactness caveat: when A lands EXACTLY on the decision threshold
+        (k + 0.5, possible only for even N with odd symbol sums) the
+        analog output sits on the boundary and float/emulation noise may
+        round it either way — the physical transceiver's own ±1 LSB
+        threshold ambiguity.  Odd N can never tie.
+        """
+        if num_symbols(bits) != 1:
+            raise ValueError(
+                f"exact identity ONN needs a single PAM4 symbol per value "
+                f"(bits <= 2), got bits={bits}")
+        cfg = ONNConfig(structure=(1, 4, 1), approx_layers=(), bits=bits,
+                        n_servers=n_servers, k_inputs=1)
+        # hidden = x * [1,1,1,1]; out = hidden @ [1/4 ...] = x, exactly in f32
+        params = [{"w": np.ones((4, 1), np.float32),
+                   "b": np.zeros((4,), np.float32)},
+                  {"w": np.full((1, 4), 0.25, np.float32),
+                   "b": np.zeros((1,), np.float32)}]
+        return cls(cfg, params)
+
+    @classmethod
+    def train(cls, cfg: ONNConfig, epochs: int, seed: int = 0,
+              samples: int = 0, **train_kw) -> "ONNModule":
+        """Hardware-aware training (cayley mode: constraint-exact)."""
+        from . import dataset, training
+        if samples:
+            a, t = dataset.sampled_dataset(
+                cfg, np.random.default_rng(seed), samples)
+        else:
+            a, t = dataset.full_dataset(cfg)
+        tcfg = training.TrainConfig(
+            epochs=epochs, e1=int(epochs * 0.8), mode="cayley", seed=seed,
+            **train_kw)
+        params, _ = training.train(cfg, tcfg, a, t, eval_every=0)
+        return cls.from_params(cfg, params)
+
+    # ------------------------------------------------------ fidelities
+    def apply(self, a: jnp.ndarray) -> jnp.ndarray:
+        """Dense forward pass -> analog outputs in symbol units."""
+        return onn_mod.apply(self.params, a, self.cfg)
+
+    @property
+    def programs(self) -> list:
+        """Compiled MZI-mesh layer programs (Givens-programmed once)."""
+        if self._programs is None:
+            hw = onn_mod.map_to_hardware(self.params, self.cfg)
+            self._programs = mesh_mod.compile_hardware(hw)
+        return self._programs
+
+    def apply_mesh(self, a: jnp.ndarray) -> jnp.ndarray:
+        """Forward pass through the phase-programmed mesh emulator."""
+        return mesh_mod.apply_hardware(self.programs, a, self.cfg)
+
+    def symbols(self, a: jnp.ndarray, fidelity: str = "onn") -> jnp.ndarray:
+        """Analog forward pass + transceiver readout -> PAM4 symbols."""
+        out = self.apply_mesh(a) if fidelity == "mesh" else self.apply(a)
+        return self.transceiver.readout(out)
+
+    # ------------------------------------------------------ diagnostics
+    def accuracy(self, a, tgt) -> float:
+        from . import training
+        return training.accuracy(self.params, np.asarray(a), np.asarray(tgt),
+                                 self.cfg)
+
+    def area_ratio(self) -> float:
+        return onn_mod.area_ratio(self.cfg)

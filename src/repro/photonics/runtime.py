@@ -1,0 +1,147 @@
+"""ONN resolution for the collective engine's photonic fidelities.
+
+``OptincBackend.sync`` runs inside a shard_map trace; when
+``SyncConfig.photonics.fidelity`` asks for the ``onn``/``mesh`` path it
+needs the trained ``ONNModule`` as concrete arrays (closed over as jit
+constants).  This module owns that resolution — keyed by
+``(PhotonicsConfig, bits, n_servers)`` and cached process-wide so a
+module is built/loaded/trained at most once per scenario, not once per
+trace.
+
+``warmup`` lets sessions resolve eagerly (outside any trace) so a slow
+source ('train') pays its cost at build time, and a missing source
+fails with guidance before the step loop starts.
+"""
+from __future__ import annotations
+
+import pathlib
+import pickle
+
+from .config import PhotonicsConfig
+from .encoding import num_symbols
+from .module import ONNModule
+from .onn import ONNConfig
+
+_CACHE: dict = {}
+
+# quickstart --onn --scenario1 persists its trained params here (also the
+# location benchmarks/table1.py reads)
+RESULTS_PICKLES = ("results/scenario1_cayley_params.pkl",
+                   "results/scenario1_params.pkl")
+
+# src/repro/photonics/runtime.py -> the repo root, the same anchor
+# benchmarks/common.py uses for results/ — so resolution does not depend
+# on the launch directory (CWD is still tried as a fallback for
+# installed-package layouts)
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+
+def _pickle_candidates():
+    for name in RESULTS_PICKLES:
+        yield _REPO_ROOT / name
+        yield pathlib.Path(name)
+
+
+def clamp_k(bits: int, k: int) -> int:
+    """K cannot exceed the PAM4 symbol count M = ceil(bits/2)."""
+    return max(1, min(k, num_symbols(bits)))
+
+
+def default_structure(bits: int, k_inputs: int) -> tuple:
+    """Default ONN structure for a bit width: the paper's scenario-1 shape
+    (K, 64, 128, 256, 128, 64, M), collapsing to the exact-identity shape
+    when the transfer function is a single symbol."""
+    m = num_symbols(bits)
+    k = clamp_k(bits, k_inputs)
+    if m == 1 and k == 1:
+        return (1, 4, 1)
+    return (k, 64, 128, 256, 128, 64, m)
+
+
+def onn_config(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNConfig:
+    k = clamp_k(bits, ph.k_inputs)
+    structure = ph.structure or default_structure(bits, ph.k_inputs)
+    return ONNConfig(structure=tuple(structure),
+                     approx_layers=tuple(ph.approx_layers),
+                     bits=bits, n_servers=n_servers, k_inputs=k)
+
+
+def _load_results(cfg: ONNConfig, adopt_structure: bool) -> ONNModule | None:
+    """Load a pickle whose saved ONNConfig is usable for ``cfg``.
+
+    With an explicit requested structure the saved config must match it
+    EXACTLY (structure, approx_layers, bits, N, K): params trained
+    without the approximation projection would silently mis-map onto the
+    mesh, and an ONN trained for a different N sees inputs off its
+    1/N-step training grid, so 100% accuracy no longer transfers.  With
+    ``adopt_structure`` (PhotonicsConfig.structure == (), i.e. "use what
+    is trained"), only (bits, N, K) must match and the saved structure /
+    approx_layers are adopted wholesale."""
+    def fp(c):
+        key = (c.bits, c.n_servers, c.k_inputs)
+        return key if adopt_structure else (
+            key + (tuple(c.structure), tuple(c.approx_layers)))
+
+    for p in _pickle_candidates():
+        if not p.exists():
+            continue
+        with open(p, "rb") as f:
+            blob = pickle.load(f)
+        saved = blob.get("cfg")
+        if saved is not None and fp(saved) == fp(cfg):
+            return ONNModule.from_params(saved if adopt_structure else cfg,
+                                         blob["params"])
+    return None
+
+
+def _build(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
+    cfg = onn_config(ph, bits, n_servers)
+    exact_ok = (num_symbols(bits) == 1 and cfg.k_inputs == 1
+                and not ph.structure)
+    if ph.params == "exact" or (ph.params == "auto" and exact_ok):
+        return ONNModule.exact_identity(bits, n_servers)
+    if ph.params in ("results", "auto"):
+        module = _load_results(cfg, adopt_structure=not ph.structure)
+        if module is not None:
+            return module
+        if ph.params == "results":
+            raise ValueError(
+                f"photonics params='results' but no matching pickle in "
+                f"{RESULTS_PICKLES} for structure {cfg.structure} "
+                f"(run `python examples/quickstart.py --onn --scenario1` "
+                f"to produce one)")
+    if ph.params == "train" or (ph.params == "auto" and ph.train_epochs > 0):
+        if ph.train_epochs <= 0:
+            raise ValueError("photonics params='train' needs train_epochs>0")
+        return ONNModule.train(cfg, epochs=ph.train_epochs, seed=ph.seed)
+    raise ValueError(
+        f"cannot resolve an ONN for fidelity={ph.fidelity!r} at bits={bits}: "
+        f"no trained params found.  Use --bits 2 (built-in exact identity "
+        f"ONN), train scenario-1 params (`python examples/quickstart.py "
+        f"--onn --scenario1`), or set PhotonicsConfig(params='train', "
+        f"train_epochs=...)")
+
+
+def get_module(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
+    """The cached ONNModule for one (photonics, bits, N) scenario."""
+    key = (ph, bits, n_servers)
+    if key not in _CACHE:
+        module = _build(ph, bits, n_servers)
+        if ph.fidelity == "mesh":
+            module.programs  # Givens-program the meshes once, eagerly
+        _CACHE[key] = module
+    return _CACHE[key]
+
+
+def put_module(ph: PhotonicsConfig, bits: int, n_servers: int,
+               module: ONNModule) -> None:
+    """Pre-populate the cache (tests / custom-trained modules)."""
+    _CACHE[(ph, bits, n_servers)] = module
+
+
+def warmup(sync_cfg, n_servers: int) -> ONNModule | None:
+    """Resolve the ONN for a SyncConfig eagerly (no-op for behavioral)."""
+    ph = getattr(sync_cfg, "photonics", None)
+    if ph is None or ph.fidelity == "behavioral":
+        return None
+    return get_module(ph, sync_cfg.bits, n_servers)

@@ -1,20 +1,18 @@
-"""Test-suite wiring: platform pinning and optional-dependency gates.
-
-The container image may lack ``hypothesis`` (and nothing may be pip
-installed); when it is missing we register a deterministic miniature
-stand-in providing the tiny surface the suite uses (@given/@settings and
-the integers/floats/lists strategies), sampling a fixed number of
-seeded examples so the property tests still exercise the code.
+"""Test-suite wiring: platform pinning and subprocess environments.
 
 The suite is a CPU suite (host-device meshes via XLA_FLAGS); pin
 JAX_PLATFORMS before any jax import so jax does not spend a minute
 probing for accelerator runtimes that are not attached.  An explicit
 JAX_PLATFORMS in the environment still wins.
+
+``hypothesis`` is a REAL optional dependency: property-based tests
+(test_encoding.py, test_photonics_properties.py) call
+``pytest.importorskip("hypothesis")`` and skip cleanly when the package
+is absent (this container); CI installs it and runs them for real.  The
+old deterministic miniature stand-in that used to live here silently
+downgraded the property tests to 25 fixed samples — gone.
 """
 import os
-import random
-import sys
-import types
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
@@ -28,53 +26,3 @@ def subprocess_env(**extra):
            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     env.update(extra)
     return env
-
-try:
-    import hypothesis  # noqa: F401
-except ModuleNotFoundError:
-    class _Strategy:
-        def __init__(self, sample):
-            self.sample = sample
-
-    def integers(min_value, max_value):
-        return _Strategy(lambda r: r.randint(min_value, max_value))
-
-    def floats(min_value, max_value, allow_nan=True, allow_infinity=True):
-        return _Strategy(lambda r: r.uniform(min_value, max_value))
-
-    def lists(elements, min_size=0, max_size=10):
-        return _Strategy(
-            lambda r: [elements.sample(r)
-                       for _ in range(r.randint(min_size, max_size))])
-
-    def given(*arg_strategies, **kw_strategies):
-        def deco(fn):
-            # NOTE: no functools.wraps — the wrapper must present a
-            # zero-arg signature or pytest treats the strategy-filled
-            # parameters as fixtures.
-            def wrapper():
-                rng = random.Random(0)
-                for _ in range(25):
-                    extra = [s.sample(rng) for s in arg_strategies]
-                    named = {n: s.sample(rng)
-                             for n, s in kw_strategies.items()}
-                    fn(*extra, **named)
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-        return deco
-
-    def settings(*a, **kw):
-        return lambda fn: fn
-
-    strategies = types.ModuleType("hypothesis.strategies")
-    strategies.integers = integers
-    strategies.floats = floats
-    strategies.lists = lists
-    stub = types.ModuleType("hypothesis")
-    stub.given = given
-    stub.settings = settings
-    stub.strategies = strategies
-    stub.__is_repro_stub__ = True
-    sys.modules["hypothesis"] = stub
-    sys.modules["hypothesis.strategies"] = strategies

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core.collective import SyncConfig
+from repro.collectives import SyncConfig
 from repro.launch import steps
 from repro.launch.mesh import make_mesh
 from repro.models import lm

@@ -12,8 +12,9 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core.collective import SyncConfig, sync_gradients, ring_allreduce
-    from repro.core.encoding import QuantSpec, quantize, dequantize, qmean
+    from repro.collectives import SyncConfig, sync_gradients
+    from repro.core.collective import ring_allreduce
+    from repro.photonics.encoding import QuantSpec, quantize, dequantize, qmean
     from repro.launch.mesh import make_mesh
 
     mesh = make_mesh((8,), ("data",))

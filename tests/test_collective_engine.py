@@ -151,7 +151,7 @@ CASCADE_SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.collectives import SyncConfig, sync_gradients
     from repro.core import cascade
-    from repro.core.encoding import QuantSpec, quantize, dequantize
+    from repro.photonics.encoding import QuantSpec, quantize, dequantize
     from repro.launch.mesh import make_mesh
 
     mesh = make_mesh((2, 2), ("pod", "data"))

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import approx, area, mzi
+from repro.photonics import approx, area, mzi
 
 
 @pytest.mark.parametrize("m", [2, 4, 8, 16, 32])

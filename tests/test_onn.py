@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import dataset, onn, training
-from repro.core.onn import ONNConfig
+from repro.photonics import dataset, onn, training
+from repro.photonics import ONNConfig
 
 TINY = ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
                  bits=4, n_servers=2, k_inputs=2)
@@ -25,7 +25,7 @@ def test_server_side_dataset_consistent_with_grid():
     cfg = ONNConfig(structure=(4,), approx_layers=(), bits=8, n_servers=4,
                     k_inputs=4)
     a, t = dataset.server_side_dataset(cfg, rng, 200)
-    from repro.core import encoding as enc
+    from repro.photonics import encoding as enc
     out = np.asarray(enc.oracle_from_preprocessed(a, 8, 4))
     np.testing.assert_array_equal(out, t)
 
@@ -44,7 +44,7 @@ def test_training_reaches_full_accuracy_tiny(mode):
     floor = 0.98 if mode == "cayley" else 0.93
     assert acc >= floor, acc
     # hardware structure enforced on the approximated layers
-    from repro.core import approx
+    from repro.photonics import approx
     for idx, layer in enumerate(params, start=1):
         if idx in TINY.approx_layers:
             assert approx.approx_error(layer["w"]) < 1e-4

@@ -1,0 +1,307 @@
+"""repro.photonics subsystem: jittable MZI mesh emulator vs the numpy
+oracle, the optinc fidelity cascade, package layout (no import cycles,
+core/ shims), and Pallas interpret auto-detection."""
+import inspect
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.photonics import (MZIMesh, ONNConfig, ONNModule, PhotonicsConfig,
+                             encoding, mesh, mzi, onn, resolve_interpret,
+                             runtime)
+
+TINY = ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
+                 bits=4, n_servers=2, k_inputs=2)
+
+
+# ------------------------- mesh emulator vs oracle -------------------------
+
+@pytest.mark.parametrize("m", [2, 5, 16, 64])
+def test_mesh_matches_reconstruct(m):
+    rng = np.random.default_rng(m)
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    prog = mzi.givens_decompose(q)
+    emu = MZIMesh.compile(prog)
+    assert emu.num_rotations == len(prog.rotations)
+    np.testing.assert_allclose(np.asarray(emu.matrix(), np.float64), q,
+                               atol=1e-4)
+    x = rng.normal(size=(7, m)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(emu.apply(jnp.asarray(x))),
+                               x @ q.T, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(emu.apply(jnp.asarray(x), transpose=True)), x @ q,
+        atol=1e-4)
+
+
+def test_mesh_apply_hardware_matches_numpy_oracle():
+    """Jitted f32 emulator vs the numpy apply_hardware oracle on the full
+    TINY ONN (SVD + approximated layers, ReLU, scales)."""
+    params = onn.project_approx(onn.init_params(TINY, jax.random.PRNGKey(0)),
+                                TINY)
+    hw = onn.map_to_hardware(params, TINY)
+    progs = mesh.compile_hardware(hw)
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0, TINY.in_scale, size=(64, 2)).astype(np.float32)
+    want = onn.apply_hardware(hw, a, TINY)
+    fwd = jax.jit(lambda x: mesh.apply_hardware(progs, x, TINY))
+    np.testing.assert_allclose(np.asarray(fwd(jnp.asarray(a))), want,
+                               atol=1e-3)
+    # vmap-able: per-sample vmap equals the batched call
+    vm = jax.vmap(lambda x: mesh.apply_hardware(progs, x, TINY))
+    np.testing.assert_allclose(np.asarray(vm(jnp.asarray(a))),
+                               np.asarray(fwd(jnp.asarray(a))), atol=1e-5)
+
+
+ORACLE_X64 = textwrap.dedent("""
+    import json
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.photonics import mesh, mzi, onn
+    from repro.photonics.onn import ONNConfig
+
+    CFGS = [
+        ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
+                  bits=4, n_servers=2, k_inputs=2),
+        ONNConfig(structure=(4, 32, 64, 32, 4), approx_layers=(),
+                  bits=8, n_servers=4, k_inputs=4),
+        ONNConfig(structure=(1, 4, 1), approx_layers=(), bits=2,
+                  n_servers=3, k_inputs=1),
+    ]
+    diffs = []
+    for i, cfg in enumerate(CFGS):
+        params = onn.project_approx(
+            onn.init_params(cfg, jax.random.PRNGKey(i)), cfg)
+        hw = onn.map_to_hardware(params, cfg)
+        progs = mesh.compile_hardware(hw)          # float64 under x64
+        a = np.random.default_rng(i).uniform(
+            0, cfg.in_scale, size=(32, cfg.structure[0]))
+        want = onn.apply_hardware(hw, a, cfg)
+        got = np.asarray(jax.jit(
+            lambda x: mesh.apply_hardware(progs, x, cfg))(jnp.asarray(a)))
+        diffs.append(float(np.abs(got - want).max()))
+    print(json.dumps(diffs))
+""")
+
+
+def test_mesh_oracle_parity_1e6_x64():
+    """Acceptance bar: the emulator matches the numpy oracle to <= 1e-6 on
+    every ONNConfig structure the suite uses (x64 so float noise cannot
+    mask a math error; the compile default follows jax_enable_x64)."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", ORACLE_X64],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env(JAX_ENABLE_X64="1"))
+    assert r.returncode == 0, r.stderr[-2000:]
+    diffs = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(d <= 1e-6 for d in diffs), diffs
+
+
+# ----------------------- exact identity ONN = oracle -----------------------
+
+def test_exact_identity_module_is_oracle():
+    """All 27 three-server code combinations at bits=2: the built-in exact
+    ONN reproduces Q(mean) through BOTH the dense and the mesh path."""
+    module = ONNModule.exact_identity(bits=2, n_servers=3)
+    codes = np.stack(np.meshgrid(*([np.arange(3)] * 3),
+                                 indexing="ij")).reshape(3, -1)
+    sym = encoding.pam4_encode(jnp.asarray(codes), 2)
+    a = encoding.preprocess(sym, 2, module.cfg.k_inputs)
+    want = np.asarray(encoding.expected_avg_symbols(sym, 2))
+    np.testing.assert_array_equal(
+        np.asarray(module.symbols(a, fidelity="onn")), want)
+    np.testing.assert_array_equal(
+        np.asarray(module.symbols(a, fidelity="mesh")), want)
+
+
+def test_exact_identity_requires_single_symbol():
+    with pytest.raises(ValueError):
+        ONNModule.exact_identity(bits=8, n_servers=4)
+
+
+# --------------------- fidelity cascade in the collective -------------------
+
+FIDELITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.collectives import SyncConfig, sync_gradients
+    from repro.photonics import PhotonicsConfig
+    from repro.launch.mesh import make_mesh
+
+    rng = np.random.default_rng(0)
+    # odd N: random data (the unit-P average can never tie at x.5);
+    # even N: identical per-device gradients (code sums divisible by N),
+    # so the even-N path is exercised without decision-threshold ties
+    cases = {
+        "n3": (make_mesh((3,), ("data",)),
+               rng.normal(size=(3, 4096)).astype(np.float32)),
+        "n4": (make_mesh((4,), ("data",)),
+               np.tile(rng.normal(size=(1, 4096)).astype(np.float32),
+                       (4, 1))),
+    }
+
+    def run(mesh, g, fidelity):
+        ph = PhotonicsConfig(fidelity=fidelity)
+        sync = SyncConfig(mode="optinc", axes=("data",), bits=2, block=512,
+                          error_feedback=True, photonics=ph)
+        def f(x):
+            out, res = sync_gradients([x], sync, None,
+                                      jnp.zeros((x.size,), jnp.float32))
+            return out[0], res
+        fn = jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=P("data"),
+            out_specs=(P("data"), P("data")), check_vma=False))
+        out, res = fn(jnp.asarray(g.reshape(-1)))
+        return np.asarray(out), np.asarray(res)
+
+    results = {}
+    for name, (mesh, g) in cases.items():
+        beh, beh_res = run(mesh, g, "behavioral")
+        for fid in ("onn", "mesh"):
+            out, res = run(mesh, g, fid)
+            results[f"{name}.{fid}"] = [float(np.abs(out - beh).max()),
+                                        float(np.abs(res - beh_res).max())]
+    print(json.dumps(results))
+""")
+
+
+def test_fidelity_mesh_reproduces_behavioral_multidevice():
+    """Acceptance bar: a jit-compiled fidelity='mesh' (and 'onn')
+    sync_gradients step on a 100%-accuracy ONN reproduces the behavioral
+    backend's averaged gradient (and error-feedback residual) bit-exactly
+    — on a 3-device mesh with random gradients and a 4-device mesh with
+    tie-free gradients (exactness is only claimed away from the PAM4
+    decision threshold; see EXPERIMENTS.md §Mesh emulation)."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", FIDELITY_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    results = json.loads(r.stdout.strip().splitlines()[-1])
+    for key, diffs in results.items():
+        assert diffs == [0.0, 0.0], (key, results)
+
+
+def test_cascade_backend_rejects_photonic_fidelity():
+    from repro.collectives import get_backend, SyncConfig
+    cfg = SyncConfig(mode="cascade", axes=("pod", "data"),
+                     photonics=PhotonicsConfig(fidelity="mesh"))
+    with pytest.raises(ValueError, match="behavioral-only"):
+        get_backend("cascade").sync(jnp.zeros((8,)), cfg, None)
+
+
+# ------------------------------ runtime resolution --------------------------
+
+def test_runtime_resolves_exact_and_caches():
+    ph = PhotonicsConfig(fidelity="mesh")
+    m1 = runtime.get_module(ph, 2, 3)
+    assert m1.cfg.structure == (1, 4, 1)
+    assert m1._programs is not None          # mesh fidelity precompiles
+    assert runtime.get_module(ph, 2, 3) is m1
+
+
+def test_runtime_refuses_untrained_wide_bits():
+    with pytest.raises(ValueError, match="no trained params"):
+        runtime._build(PhotonicsConfig(fidelity="onn"), 8, 4)
+
+
+def test_runtime_put_module_overrides():
+    ph = PhotonicsConfig(fidelity="onn", k_inputs=1)
+    module = ONNModule.exact_identity(2, 5)
+    runtime.put_module(ph, 2, 5, module)
+    assert runtime.get_module(ph, 2, 5) is module
+
+
+# ------------------------- package layout / import order --------------------
+
+def test_no_import_cycle_onn_first():
+    """Importing repro.photonics.onn FIRST (fresh interpreter) must work:
+    the encoding dependency is a clean module-level import now."""
+    from conftest import subprocess_env
+    code = ("import repro.photonics.onn as o; "
+            "print(o.ONNConfig(structure=(4,), bits=8, n_servers=4, "
+            "k_inputs=4).in_scale)")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip() == "3.0"  # g = ceil(M/K) = 1 -> 4^1 - 1
+    # and the historical function-local workaround is really gone
+    src = inspect.getsource(ONNConfig.in_scale.fget)
+    assert "import" not in src
+
+
+def test_core_shims_alias_photonics():
+    """core/ re-export shims expose the same objects, not copies."""
+    from repro.core import approx as c_approx
+    from repro.core import encoding as c_enc
+    from repro.core import mzi as c_mzi
+    from repro.core import onn as c_onn
+    from repro.core import training as c_training
+    from repro.photonics import approx as p_approx, training as p_training
+    assert c_onn.ONNConfig is ONNConfig
+    assert c_enc.pam4_encode is encoding.pam4_encode
+    assert c_mzi.givens_decompose is mzi.givens_decompose
+    assert c_approx.approx_matrix is p_approx.approx_matrix
+    assert c_training.train is p_training.train
+
+
+# ----------------------- spec threading of the fidelity knob ----------------
+
+def test_runspec_fidelity_flag_and_roundtrip():
+    from repro.api import RunSpec, SpecError
+    spec = RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                              "--fidelity", "mesh"])
+    assert spec.sync.photonics.fidelity == "mesh"
+    assert RunSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(SpecError, match="optinc-backend knob"):
+        RunSpec.from_args(["--sync", "ring", "--fidelity", "mesh"])
+    # a bad fidelity in a --spec file is a SpecError, not a raw ValueError
+    with pytest.raises(SpecError, match="invalid PhotonicsConfig"):
+        RunSpec.from_json_dict({"sync": {"photonics": {"fidelity": "bogus"}}})
+
+
+# -------------------- Pallas interpret auto-detection -----------------------
+
+def test_resolve_interpret():
+    on_tpu = jax.default_backend() == "tpu"
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_kernel_auto_interpret_agrees():
+    """The auto-detected path and the explicit interpret=True path must
+    produce identical results (on TPU this pits the compiled kernel
+    against the interpreter; off-TPU both interpret — either way the
+    kernels must agree with the jnp reference)."""
+    from repro.kernels import pam4 as pam4_k
+    from repro.kernels import onn_layer as onn_k
+    from repro.kernels import ref
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    scale = jnp.max(jnp.abs(g), axis=1)
+    auto = pam4_k.pam4_quantize_encode(g, scale, 8)
+    forced = pam4_k.pam4_quantize_encode(g, scale, 8, interpret=True)
+    want = ref.pam4_quantize_encode_ref(g, scale, 8, 256)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced))
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(want))
+
+    x = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    q, _ = np.linalg.qr(rng.normal(size=(128, 128)))
+    u = jnp.asarray(q.astype(np.float32))
+    d = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    y_auto = onn_k.onn_layer(x, u, d, b)
+    y_forced = onn_k.onn_layer(x, u, d, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_forced))
+    np.testing.assert_allclose(np.asarray(y_auto),
+                               np.asarray(ref.onn_layer_ref(x, u, d, b)),
+                               rtol=1e-4, atol=1e-4)
