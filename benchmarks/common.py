@@ -11,10 +11,32 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 DRYRUN = RESULTS / "dryrun"     # shared with launch/dryrun.py --out and
                                 # scripts/fix_dryrun_stats.py --out
+BENCH_JSON = RESULTS / "bench"  # per-section JSON row dumps (CI artifacts)
+
+_ROWS: list = []                # rows emitted since the last flush/reset
 
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
+
+
+def reset_rows():
+    """Drop buffered rows (benchmarks.run calls this between sections so a
+    failed section cannot leak rows into the next section's JSON)."""
+    _ROWS.clear()
+
+
+def flush_json(section: str) -> pathlib.Path:
+    """Write (and clear) the rows emitted since the last flush to
+    ``results/bench/<section>.json`` — the machine-readable mirror of the
+    CSV stdout, uploaded as a CI artifact per commit."""
+    BENCH_JSON.mkdir(parents=True, exist_ok=True)
+    path = BENCH_JSON / f"{section}.json"
+    path.write_text(json.dumps(_ROWS, indent=1) + "\n")
+    _ROWS.clear()
+    return path
 
 
 def timed(fn, *args, repeats=3, **kw):

@@ -12,8 +12,8 @@ import argparse
 import sys
 import traceback
 
-from . import (fig6, fig7a, fig7b, mesh_emulation, roofline_table, table1,
-               table2)
+from . import (common, fig6, fig7a, fig7b, mesh_emulation, roofline_table,
+               table1, table2, trained_onn)
 
 SECTIONS = {
     "table1": table1.main,
@@ -22,6 +22,7 @@ SECTIONS = {
     "fig7a": fig7a.main,
     "fig7b": fig7b.main,
     "mesh_emulation": mesh_emulation.main,
+    "trained_onn": trained_onn.main,
     "roofline": roofline_table.main,
 }
 
@@ -37,6 +38,7 @@ def main() -> None:
         if name not in only:
             continue
         print(f"# --- {name} ---")
+        common.reset_rows()  # a failed section must not leak rows forward
         try:
             fn(full=args.full)
         except Exception:

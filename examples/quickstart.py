@@ -49,7 +49,7 @@ def run_api(args):
     print("generated ids[0]:", np.asarray(gen[0]).tolist())
 
 
-def run_onn(scenario1: bool):
+def run_onn(scenario1: bool, epochs_override: int = 0):
     import numpy as np
 
     from repro.photonics import area, dataset, encoding, onn, training
@@ -65,6 +65,10 @@ def run_onn(scenario1: bool):
                         approx_layers=(1, 2, 3, 4, 5, 6),
                         bits=4, n_servers=2, k_inputs=2)
         epochs, e1 = 4000, 3200
+    if epochs_override:
+        # dev/CI plumbing knob: a shortened run exercises the identical
+        # pipeline (and still persists params) at reduced accuracy
+        epochs, e1 = epochs_override, int(epochs_override * 0.8)
 
     print(f"scenario: B={cfg.bits} N={cfg.n_servers} structure={cfg.structure}")
     print(f"dataset size (paper formula): {dataset.dataset_size(cfg)}")
@@ -128,11 +132,14 @@ def main():
                     help="run the paper's core ONN pipeline demo")
     ap.add_argument("--scenario1", action="store_true",
                     help="paper Table-I scenario 1 (implies --onn; slow)")
+    ap.add_argument("--epochs", type=int, default=0,
+                    help="override the ONN training epoch budget (0 = the "
+                         "scenario default; use for fast plumbing checks)")
     ap.add_argument("--arch", default="minitron_4b")
     ap.add_argument("--steps", type=int, default=3)
     args = ap.parse_args()
     if args.onn or args.scenario1:
-        run_onn(args.scenario1)
+        run_onn(args.scenario1, epochs_override=args.epochs)
     else:
         run_api(args)
 

@@ -25,7 +25,7 @@ from ..data import DataConfig
 from ..launch.mesh import make_mesh
 from ..models.layers import ShardCtx
 from ..optim import AdamWConfig
-from ..photonics import FIDELITIES
+from ..photonics import FIDELITIES, MESH_BACKENDS
 
 
 class SpecError(ValueError):
@@ -179,6 +179,11 @@ class RunSpec:
                 f"--fidelity {ph.fidelity} is an optinc-backend knob "
                 f"(the hardware-in-the-loop ONN path); got --sync "
                 f"{self.sync.mode}")
+        if ph.mesh_backend != "xla" and ph.fidelity != "mesh":
+            raise SpecError(
+                f"--mesh-backend {ph.mesh_backend} selects the MZI-emulator "
+                f"executor and only applies to --fidelity mesh; got "
+                f"--fidelity {ph.fidelity}")
         if self.sync.bucket_bytes <= 0:
             raise SpecError(f"bucket_bytes must be > 0, "
                             f"got {self.sync.bucket_bytes}")
@@ -251,6 +256,9 @@ class RunSpec:
                         help="optinc emulation depth: behavioral Q(mean) | "
                              "trained dense ONN | MZI mesh emulator "
                              "(repro.photonics)")
+        ap.add_argument("--mesh-backend", choices=MESH_BACKENDS,
+                        help="fidelity=mesh executor: per-layer XLA scan | "
+                             "fused Pallas VMEM kernel (kernels.mesh_scan)")
         ap.add_argument("--error-layers",
                         help="Table II key, e.g. '3,4,5,6' (ONN errors)")
         ap.add_argument("--error-feedback", action="store_true")
@@ -304,9 +312,14 @@ class RunSpec:
             sync_kw["mode"] = ns.pop("sync")
         if "bits" in ns:
             sync_kw["bits"] = ns.pop("bits")
+        ph_kw = {}
         if "fidelity" in ns:
+            ph_kw["fidelity"] = ns.pop("fidelity")
+        if "mesh_backend" in ns:
+            ph_kw["mesh_backend"] = ns.pop("mesh_backend")
+        if ph_kw:
             sync_kw["photonics"] = dataclasses.replace(
-                self.sync.photonics, fidelity=ns.pop("fidelity"))
+                self.sync.photonics, **ph_kw)
         if "bucket_mb" in ns:
             sync_kw["bucket_bytes"] = int(ns.pop("bucket_mb") * 2 ** 20)
         if "error_layers" in ns:

@@ -178,7 +178,8 @@ def _photonic_sync(flat, cfg, key):
     for ax in cfg.axes:
         total = lax.psum(total, ax)
     a = total / n                                   # unit P output (L, K)
-    out_sym = module.symbols(a, fidelity=cfg.photonics.fidelity)
+    out_sym = module.symbols(a, fidelity=cfg.photonics.fidelity,
+                             mesh_backend=cfg.photonics.mesh_backend)
     u_avg = pam4_decode(out_sym)                         # (L,) int32
     if cfg.error_layers and key is not None:
         spec_err = error_model.TABLE_II[tuple(cfg.error_layers)]

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+#   pam4.py       fused quantize + PAM4-encode (paper eq. 2)
+#   onn_layer.py  MXU matmul + diag/bias/ReLU epilogue (paper eq. 4)
+#   mesh_scan.py  fused L-layer MZI rotation cascade in VMEM
+#                 (PhotonicsConfig.mesh_backend = 'pallas')

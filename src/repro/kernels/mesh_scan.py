@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: the fused L-layer MZI-mesh cascade in VMEM.
+
+``photonics.mesh.MZIMesh.apply`` lowers to one XLA gather + FMA per
+rotation layer under ``lax.scan`` — L round-trips of the batch tile
+through HBM for an L-layer Clements cascade.  This kernel keeps the
+whole compiled program resident instead: the three (L, m) layer stacks
+(partner permutation ``perm``, diagonal ``ca``, off-diagonal ``sa``)
+plus one batch tile live in VMEM together, and a ``fori_loop`` applies
+all L layers back to back — ONE HBM read and ONE HBM write per batch
+tile for the entire mesh, however deep it is.
+
+The per-layer wire shuffle ``y[..., perm]`` is not a native TPU lane
+operation; it is realized as a one-hot matmul on the MXU:
+
+    P[i, j] = (perm[j] == i)          (built in-VMEM from an iota)
+    y[..., perm] = y @ P
+
+so a layer is one (blk_b, m) x (m, m) MXU pass + a fused VPU FMA.  The
+sign column and an optional diagonal epilogue (the Sigma_a ``d`` scale
+of ``ApproxLayerProgram`` — the same fusion ``kernels/onn_layer.py``
+gives the dense path) ride along as free pre/post VPU multiplies, so
+the whole ``diag(post) . G_1^T..G_K^T . diag(pre)`` chain is one kernel.
+
+VMEM budget (f32, the compiled-TPU case): the layer stacks cost
+3 * L * m_pad * 4 bytes and the tile 2 * blk_b * m_pad * 4 + m_pad^2 * 4
+(one-hot scratch); for the deepest program in the repo (m = 256,
+L ~ 2m = 512) that is ~1.6 MiB + ~0.5 MiB — comfortably inside the
+~16 MiB/core budget with the default blk_b = 128.
+
+``interpret`` auto-detects via ``photonics.resolve_interpret`` (compiled
+on TPU, interpreted everywhere else); the interpreted path runs the
+identical one-hot math, so CPU CI exercises the same numerics the TPU
+executes.  ``photonics.mesh`` keeps the pure-XLA scan as the fallback
+backend (``mesh_backend='xla'``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..photonics.config import resolve_interpret
+
+
+def _round_up(n: int, k: int) -> int:
+    return -(-n // k) * k
+
+
+def _mesh_scan_kernel(perm_ref, ca_ref, sa_ref, pre_ref, post_ref, x_ref,
+                      y_ref, *, n_layers: int, transpose: bool):
+    dt = y_ref.dtype
+    y = x_ref[...] * pre_ref[...]
+    m = y.shape[-1]
+    # wire[i, j] = i; comparing against a perm row makes the one-hot
+    # permutation matrix P with P[i, j] = (perm[j] == i), so y @ P is
+    # y[..., perm] (TPU needs >= 2-D iota)
+    wire = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+
+    def body(i, y):
+        l = (n_layers - 1 - i) if transpose else i
+        p = perm_ref[pl.ds(l, 1), :]                    # (1, m)
+        ca = ca_ref[pl.ds(l, 1), :]
+        sa = sa_ref[pl.ds(l, 1), :]
+        # HIGHEST precision: the MXU's default truncates f32 inputs to
+        # bf16, which would round y on every one of the L layers —
+        # selection through an exact 0/1 matrix must stay exact
+        onehot = (wire == p).astype(dt)
+        y_p = jnp.dot(y, onehot, preferred_element_type=dt,
+                      precision=jax.lax.Precision.HIGHEST)
+        # forward applies G^T (the compiled sa), transpose applies G
+        return ca * y - sa * y_p if transpose else ca * y + sa * y_p
+
+    y = jax.lax.fori_loop(0, n_layers, body, y)
+    y_ref[...] = (y * post_ref[...]).astype(dt)
+
+
+def mesh_scan(signs: jnp.ndarray, perm: jnp.ndarray, ca: jnp.ndarray,
+              sa: jnp.ndarray, x: jnp.ndarray, transpose: bool = False,
+              post_scale: jnp.ndarray | None = None,
+              interpret: bool | None = None, blk_b: int = 128) -> jnp.ndarray:
+    """Apply a compiled rotation-layer stack to ``x`` in one fused kernel.
+
+    Semantically identical to ``MZIMesh.apply`` (o @ x over the last axis,
+    o^T @ x when ``transpose``), with an optional fused diagonal epilogue
+    ``post_scale`` multiplied into the output.  ``perm``/``ca``/``sa`` are
+    the (L, m) stacks of ``MZIMesh``; ``signs`` is its (m,) sign column.
+    Arbitrary leading batch dims on ``x`` are flattened into the grid.
+    """
+    interpret = resolve_interpret(interpret)
+    n_layers, m = perm.shape
+    dt = jnp.result_type(x.dtype, ca.dtype)
+    batch_shape = x.shape[:-1]
+    y = x.astype(dt).reshape(-1, m)
+    if y.shape[0] == 0:
+        return y.reshape(batch_shape + (m,))
+    batch = y.shape[0]
+
+    ones = jnp.ones((m,), dt)
+    pre = ones if transpose else signs.astype(dt)
+    post = signs.astype(dt) if transpose else ones
+    if post_scale is not None:
+        post = post * post_scale.astype(dt)
+
+    # pad wires to the 128-lane tile (identity rotations: perm = self,
+    # ca = 1, sa = 0, so padded lanes stay at their zero-padded inputs)
+    # and the batch to the chosen sublane tile
+    m_pad = _round_up(max(m, 1), 128)
+    blk_b = min(blk_b, _round_up(batch, 8))
+    b_pad = _round_up(batch, blk_b)
+    if m_pad != m:
+        pad_ids = jnp.broadcast_to(jnp.arange(m, m_pad, dtype=perm.dtype),
+                                   (n_layers, m_pad - m))
+        perm = jnp.concatenate([perm, pad_ids], axis=-1)
+        ca = jnp.pad(ca, ((0, 0), (0, m_pad - m)), constant_values=1)
+        sa = jnp.pad(sa, ((0, 0), (0, m_pad - m)))
+        pre = jnp.pad(pre, (0, m_pad - m), constant_values=1)
+        post = jnp.pad(post, (0, m_pad - m), constant_values=1)
+    if b_pad != y.shape[0]:
+        y = jnp.pad(y, ((0, b_pad - y.shape[0]), (0, 0)))
+    if m_pad != m:
+        y = jnp.pad(y, ((0, 0), (0, m_pad - m)))
+
+    out = pl.pallas_call(
+        functools.partial(_mesh_scan_kernel, n_layers=n_layers,
+                          transpose=transpose),
+        grid=(b_pad // blk_b,),
+        in_specs=[
+            pl.BlockSpec((n_layers, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n_layers, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n_layers, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (0, 0)),
+            pl.BlockSpec((blk_b, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_b, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, m_pad), dt),
+        interpret=interpret,
+    )(perm, ca.astype(dt), sa.astype(dt), pre.reshape(1, -1),
+      post.reshape(1, -1), y)
+    return out[:batch, :m].reshape(batch_shape + (m,))

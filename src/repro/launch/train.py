@@ -16,6 +16,12 @@
   PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
       --smoke-config --sync optinc --bits 2 --fidelity mesh
 
+  # same, with the emulator's rotation layers fused into one Pallas
+  # VMEM kernel per batch tile (compiled on TPU, interpreted elsewhere)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync optinc --bits 2 --fidelity mesh \
+      --mesh-backend pallas
+
   # or describe the whole scenario declaratively:
   PYTHONPATH=src python -m repro.launch.train --spec my_run.json
 

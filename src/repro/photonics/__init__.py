@@ -22,14 +22,15 @@ re-export this surface for backwards compatibility.
 """
 from . import (approx, area, dataset, encoding, error_model, mesh, mzi, onn,
                training)
-from .config import FIDELITIES, PhotonicsConfig, resolve_interpret
+from .config import (FIDELITIES, MESH_BACKENDS, PhotonicsConfig,
+                     resolve_interpret)
 from .mesh import MZIMesh, compile_hardware
 from .module import ONNModule
 from .onn import ONNConfig, Transceiver
 from .runtime import get_module, put_module, warmup
 
 __all__ = [
-    "PhotonicsConfig", "FIDELITIES", "resolve_interpret",
+    "PhotonicsConfig", "FIDELITIES", "MESH_BACKENDS", "resolve_interpret",
     "ONNConfig", "ONNModule", "MZIMesh", "Transceiver",
     "compile_hardware", "get_module", "put_module", "warmup",
     "approx", "area", "dataset", "encoding", "error_model", "mesh", "mzi",

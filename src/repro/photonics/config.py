@@ -26,6 +26,13 @@ FIDELITIES = ("behavioral", "onn", "mesh")
 
 PARAM_SOURCES = ("auto", "exact", "results", "train")
 
+# how fidelity='mesh' executes the compiled rotation-layer stacks:
+#   'xla'     one gather+FMA per layer under lax.scan (photonics.mesh)
+#   'pallas'  the fused VMEM-resident kernel (kernels.mesh_scan): all L
+#             layers applied per batch tile in one pallas_call, compiled
+#             on TPU / interpreted elsewhere (resolve_interpret)
+MESH_BACKENDS = ("xla", "pallas")
+
 
 def resolve_interpret(flag: bool | None = None) -> bool:
     """Pallas ``interpret`` auto-detection: compiled on TPU, interpreted
@@ -59,6 +66,7 @@ class PhotonicsConfig:
     params: str = "auto"           # auto | exact | results | train
     train_epochs: int = 0          # 'train' source budget (0 = refuse)
     seed: int = 0
+    mesh_backend: str = "xla"      # fidelity='mesh' executor: xla | pallas
 
     def __post_init__(self):
         if self.fidelity not in FIDELITIES:
@@ -67,3 +75,6 @@ class PhotonicsConfig:
         if self.params not in PARAM_SOURCES:
             raise ValueError(f"params must be one of {PARAM_SOURCES}, "
                              f"got {self.params!r}")
+        if self.mesh_backend not in MESH_BACKENDS:
+            raise ValueError(f"mesh_backend must be one of {MESH_BACKENDS}, "
+                             f"got {self.mesh_backend!r}")

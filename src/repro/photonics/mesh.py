@@ -34,7 +34,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .config import MESH_BACKENDS
 from .mzi import MZIProgram
+
+
+def _check_backend(backend: str | None) -> str:
+    backend = backend or "xla"
+    if backend not in MESH_BACKENDS:
+        raise ValueError(f"mesh backend must be one of {MESH_BACKENDS}, "
+                         f"got {backend!r}")
+    return backend
 
 
 def _schedule_layers(rotations, m):
@@ -89,10 +98,17 @@ class MZIMesh:
     # ------------------------------------------------------- compile
     @classmethod
     def compile(cls, program: MZIProgram, dtype=None) -> "MZIMesh":
-        """Layer, pad, and stack an ``MZIProgram`` into device arrays.
+        """Layer, pad, and stack an ``MZIProgram`` into layer arrays.
 
         ``dtype`` defaults to float64 when jax x64 is enabled (oracle
         cross-checks), float32 otherwise (the fast runtime path).
+
+        The stacks are stored as NUMPY arrays on purpose: compilation may
+        run inside a jit/shard_map trace (``runtime.get_module`` resolves
+        lazily from ``_photonic_sync``), and numpy leaves stay concrete
+        there — they lower as constants in every trace that applies the
+        mesh, instead of leaking one trace's tracers into the next
+        (``module.py`` stores the dense params the same way).
         """
         if dtype is None:
             dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
@@ -113,14 +129,28 @@ class MZIMesh:
                 # G^T:  y_i' = c y_i - s y_j ;  y_j' = s y_i + c y_j
                 sa[li, i], sa[li, j] = -s, s
         return cls(dim=m, n_rot=len(program.rotations),
-                   signs=jnp.asarray(program.signs, dtype),
-                   perm=jnp.asarray(perm),
-                   ca=jnp.asarray(ca, dtype),
-                   sa=jnp.asarray(sa, dtype))
+                   signs=np.asarray(program.signs, dtype),
+                   perm=perm,
+                   ca=np.asarray(ca, dtype),
+                   sa=np.asarray(sa, dtype))
 
     # --------------------------------------------------------- apply
-    def apply(self, x: jnp.ndarray, transpose: bool = False) -> jnp.ndarray:
-        """o @ x (or o^T @ x when ``transpose``) over the last axis."""
+    def apply(self, x: jnp.ndarray, transpose: bool = False,
+              backend: str | None = None,
+              post_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+        """o @ x (or o^T @ x when ``transpose``) over the last axis.
+
+        ``backend`` selects the executor (``PhotonicsConfig.mesh_backend``):
+        'xla' (default) runs one gather+FMA per layer under ``lax.scan``;
+        'pallas' runs the fused VMEM-resident kernel
+        (``kernels.mesh_scan``).  ``post_scale`` is an optional diagonal
+        epilogue multiplied into the output — on the pallas path it is
+        fused into the kernel's final VPU pass.
+        """
+        if _check_backend(backend) == "pallas":
+            from ..kernels.mesh_scan import mesh_scan
+            return mesh_scan(self.signs, self.perm, self.ca, self.sa, x,
+                             transpose=transpose, post_scale=post_scale)
         dt = jnp.result_type(x.dtype, self.ca.dtype)
         y = x.astype(dt)
         if not transpose:
@@ -139,6 +169,8 @@ class MZIMesh:
                         reverse=transpose)
         if transpose:
             y = y * self.signs.astype(dt)
+        if post_scale is not None:
+            y = y * post_scale.astype(dt)
         return y
 
     def matrix(self) -> jnp.ndarray:
@@ -153,41 +185,47 @@ def reconstruct(program: MZIProgram, dtype=None) -> jnp.ndarray:
 
 def _stack_meshes(meshes):
     """Stack same-dim MZIMesh programs along a leading block axis, padding
-    every program to the deepest layer count with identity layers."""
+    every program to the deepest layer count with identity layers.
+    Numpy in, numpy out (trace-safe, see ``MZIMesh.compile``)."""
     dim = meshes[0].dim
     assert all(m.dim == dim for m in meshes)
     L = max(m.perm.shape[0] for m in meshes)
 
     def pad(mesh):
         pl = L - mesh.perm.shape[0]
-        ident = jnp.tile(jnp.arange(dim, dtype=mesh.perm.dtype), (pl, 1))
-        return (jnp.concatenate([mesh.perm, ident]),
-                jnp.concatenate([mesh.ca,
-                                 jnp.ones((pl, dim), mesh.ca.dtype)]),
-                jnp.concatenate([mesh.sa,
-                                 jnp.zeros((pl, dim), mesh.sa.dtype)]))
+        ident = np.tile(np.arange(dim, dtype=mesh.perm.dtype), (pl, 1))
+        return (np.concatenate([mesh.perm, ident]),
+                np.concatenate([mesh.ca,
+                                np.ones((pl, dim), mesh.ca.dtype)]),
+                np.concatenate([mesh.sa,
+                                np.zeros((pl, dim), mesh.sa.dtype)]))
 
     padded = [pad(m) for m in meshes]
     return MZIMesh(
         dim=dim,
         n_rot=sum(m.n_rot for m in meshes),
-        signs=jnp.stack([m.signs for m in meshes]),
-        perm=jnp.stack([p[0] for p in padded]),
-        ca=jnp.stack([p[1] for p in padded]),
-        sa=jnp.stack([p[2] for p in padded]))
+        signs=np.stack([m.signs for m in meshes]),
+        perm=np.stack([p[0] for p in padded]),
+        ca=np.stack([p[1] for p in padded]),
+        sa=np.stack([p[2] for p in padded]))
 
 
-def _apply_stacked(stacked: MZIMesh, x: jnp.ndarray, x_block_axis: bool):
+def _apply_stacked(stacked: MZIMesh, x: jnp.ndarray, x_block_axis: bool,
+                   backend: str | None = None,
+                   post_scale: jnp.ndarray | None = None):
     """vmap a stacked mesh over its block axis.  ``x`` is shared across
     blocks (tall layers) or carries its own block axis at -2 (wide
-    layers).  Returns (..., B, dim)."""
-    def one(signs, perm, ca, sa, xb):
-        return MZIMesh(stacked.dim, 0, signs, perm, ca, sa).apply(xb)
+    layers).  ``post_scale`` (B, dim) is each block's diagonal epilogue
+    (fused in-kernel on the pallas backend).  Returns (..., B, dim)."""
+    def one(signs, perm, ca, sa, xb, ps):
+        return MZIMesh(stacked.dim, 0, signs, perm, ca, sa).apply(
+            xb, backend=backend, post_scale=ps)
 
     out = jax.vmap(one,
-                   in_axes=(0, 0, 0, 0, -2 if x_block_axis else None),
+                   in_axes=(0, 0, 0, 0, -2 if x_block_axis else None,
+                            None if post_scale is None else 0),
                    out_axes=0)(stacked.signs, stacked.perm, stacked.ca,
-                               stacked.sa, x)
+                               stacked.sa, x, post_scale)
     return jnp.moveaxis(out, 0, -2)
 
 
@@ -215,14 +253,15 @@ class SVDLayerProgram:
         return (self.u.num_rotations + self.v.num_rotations
                 + int(self.sigma.shape[0]))
 
-    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+    def apply(self, x: jnp.ndarray, backend: str | None = None) -> jnp.ndarray:
         m, _ = self.shape
         k = self.sigma.shape[0]
-        z = self.v.apply(x, transpose=True)[..., :k] * self.sigma
+        z = self.v.apply(x, transpose=True, backend=backend)[..., :k]
+        z = z * self.sigma
         if m > k:
             z = jnp.concatenate(
                 [z, jnp.zeros(z.shape[:-1] + (m - k,), z.dtype)], axis=-1)
-        return self.u.apply(z) + self.b
+        return self.u.apply(z, backend=backend) + self.b
 
 
 @jax.tree_util.register_pytree_node_class
@@ -246,21 +285,26 @@ class ApproxLayerProgram:
         n_blocks, s = self.d.shape
         return self.meshes.num_rotations + n_blocks * s
 
-    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+    def apply(self, x: jnp.ndarray, backend: str | None = None) -> jnp.ndarray:
+        # the Sigma_a diagonal rides as the meshes' fused epilogue (the
+        # pallas kernel applies it in VMEM before the HBM write)
         m, n = self.shape
         s = min(m, n)
         if m >= n:
-            ys = _apply_stacked(self.meshes, x, x_block_axis=False)
-            y = (ys * self.d).reshape(x.shape[:-1] + (m,))
+            ys = _apply_stacked(self.meshes, x, x_block_axis=False,
+                                backend=backend, post_scale=self.d)
+            y = ys.reshape(x.shape[:-1] + (m,))
         else:
             xs = x.reshape(x.shape[:-1] + (n // s, s))
-            ys = _apply_stacked(self.meshes, xs, x_block_axis=True)
-            y = jnp.sum(ys * self.d, axis=-2)
+            ys = _apply_stacked(self.meshes, xs, x_block_axis=True,
+                                backend=backend, post_scale=self.d)
+            y = jnp.sum(ys, axis=-2)
         return y + self.b
 
 
 def compile_layer(hw_layer, dtype=None):
-    """Compile one ``onn.map_to_hardware`` layer dict to a jittable program."""
+    """Compile one ``onn.map_to_hardware`` layer dict to a jittable program.
+    Leaves are numpy (trace-safe constants, see ``MZIMesh.compile``)."""
     if dtype is None:
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
     if hw_layer["kind"] == "svd":
@@ -268,15 +312,15 @@ def compile_layer(hw_layer, dtype=None):
             shape=tuple(hw_layer["shape"]),
             u=MZIMesh.compile(hw_layer["u"], dtype),
             v=MZIMesh.compile(hw_layer["v"], dtype),
-            sigma=jnp.asarray(hw_layer["sigma"], dtype),
-            b=jnp.asarray(hw_layer["b"], dtype))
+            sigma=np.asarray(hw_layer["sigma"], dtype),
+            b=np.asarray(hw_layer["b"], dtype))
     blocks = hw_layer["blocks"]
     return ApproxLayerProgram(
         shape=tuple(hw_layer["shape"]),
         meshes=_stack_meshes([MZIMesh.compile(blk["u"], dtype)
                               for blk in blocks]),
-        d=jnp.stack([jnp.asarray(blk["d"], dtype) for blk in blocks]),
-        b=jnp.asarray(hw_layer["b"], dtype))
+        d=np.stack([np.asarray(blk["d"], dtype) for blk in blocks]),
+        b=np.asarray(hw_layer["b"], dtype))
 
 
 def compile_hardware(hw, dtype=None):
@@ -284,12 +328,14 @@ def compile_hardware(hw, dtype=None):
     return [compile_layer(layer, dtype) for layer in hw]
 
 
-def apply_hardware(programs, a: jnp.ndarray, cfg) -> jnp.ndarray:
+def apply_hardware(programs, a: jnp.ndarray, cfg,
+                   backend: str | None = None) -> jnp.ndarray:
     """Jittable forward pass through the compiled MZI meshes — the fast
-    counterpart of ``onn.apply_hardware`` (the numpy oracle)."""
+    counterpart of ``onn.apply_hardware`` (the numpy oracle).  ``backend``
+    selects the layer executor (``PhotonicsConfig.mesh_backend``)."""
     x = a / jnp.asarray(cfg.in_scale, programs[0].b.dtype)
     for li, prog in enumerate(programs):
-        x = prog.apply(x)
+        x = prog.apply(x, backend=backend)
         if li < len(programs) - 1:
             x = jax.nn.relu(x)
     return x * cfg.out_scale

@@ -104,13 +104,18 @@ class ONNModule:
             self._programs = mesh_mod.compile_hardware(hw)
         return self._programs
 
-    def apply_mesh(self, a: jnp.ndarray) -> jnp.ndarray:
-        """Forward pass through the phase-programmed mesh emulator."""
-        return mesh_mod.apply_hardware(self.programs, a, self.cfg)
+    def apply_mesh(self, a: jnp.ndarray,
+                   backend: str | None = None) -> jnp.ndarray:
+        """Forward pass through the phase-programmed mesh emulator.
+        ``backend`` picks the layer executor (xla scan | fused pallas)."""
+        return mesh_mod.apply_hardware(self.programs, a, self.cfg,
+                                       backend=backend)
 
-    def symbols(self, a: jnp.ndarray, fidelity: str = "onn") -> jnp.ndarray:
+    def symbols(self, a: jnp.ndarray, fidelity: str = "onn",
+                mesh_backend: str | None = None) -> jnp.ndarray:
         """Analog forward pass + transceiver readout -> PAM4 symbols."""
-        out = self.apply_mesh(a) if fidelity == "mesh" else self.apply(a)
+        out = (self.apply_mesh(a, backend=mesh_backend)
+               if fidelity == "mesh" else self.apply(a))
         return self.transceiver.readout(out)
 
     # ------------------------------------------------------ diagnostics

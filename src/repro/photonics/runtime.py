@@ -14,6 +14,7 @@ fails with guidance before the step loop starts.
 """
 from __future__ import annotations
 
+import dataclasses
 import pathlib
 import pickle
 
@@ -122,9 +123,16 @@ def _build(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
         f"train_epochs=...)")
 
 
+def _cache_key(ph: PhotonicsConfig, bits: int, n_servers: int):
+    # the resolved module is executor-independent: mesh_backend only
+    # selects how the compiled programs are APPLIED, so runs comparing
+    # xla vs pallas in one process must share one build/Givens-programming
+    return (dataclasses.replace(ph, mesh_backend="xla"), bits, n_servers)
+
+
 def get_module(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
     """The cached ONNModule for one (photonics, bits, N) scenario."""
-    key = (ph, bits, n_servers)
+    key = _cache_key(ph, bits, n_servers)
     if key not in _CACHE:
         module = _build(ph, bits, n_servers)
         if ph.fidelity == "mesh":
@@ -136,7 +144,7 @@ def get_module(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
 def put_module(ph: PhotonicsConfig, bits: int, n_servers: int,
                module: ONNModule) -> None:
     """Pre-populate the cache (tests / custom-trained modules)."""
-    _CACHE[(ph, bits, n_servers)] = module
+    _CACHE[_cache_key(ph, bits, n_servers)] = module
 
 
 def warmup(sync_cfg, n_servers: int) -> ONNModule | None:

@@ -1,0 +1,165 @@
+"""Fused Pallas mesh kernel (kernels.mesh_scan / mesh_backend='pallas'):
+parity against the XLA scan and the numpy oracle, the fused epilogue,
+interpret auto-detection, and the RunSpec threading of the knob."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mesh_scan import mesh_scan
+from repro.photonics import MZIMesh, ONNModule, encoding, mesh, mzi
+
+
+def _random_mesh(m, seed):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    return q, MZIMesh.compile(mzi.givens_decompose(q)), rng
+
+
+# --------------------- kernel vs xla scan vs numpy oracle -------------------
+
+@pytest.mark.parametrize("m", [2, 5, 16, 64, 130])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_mesh_scan_matches_xla_and_oracle(m, transpose):
+    q, emu, rng = _random_mesh(m, m)
+    x = rng.normal(size=(7, m)).astype(np.float32)
+    want_np = x @ (q if transpose else q.T)
+    got_xla = emu.apply(jnp.asarray(x), transpose=transpose)
+    got_pl = emu.apply(jnp.asarray(x), transpose=transpose,
+                       backend="pallas")
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(got_xla),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_pl), want_np, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch_shape", [(), (1,), (9,), (2, 3), (4, 1, 2)])
+def test_mesh_scan_batch_shapes(batch_shape):
+    _, emu, rng = _random_mesh(12, 0)
+    x = jnp.asarray(rng.normal(size=batch_shape + (12,)).astype(np.float32))
+    got = emu.apply(x, backend="pallas")
+    want = emu.apply(x)
+    assert got.shape == want.shape == batch_shape + (12,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_mesh_scan_fused_epilogue():
+    """post_scale is the in-kernel diagonal epilogue: y * d, fused."""
+    _, emu, rng = _random_mesh(16, 1)
+    x = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32))
+    d = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = mesh_scan(emu.signs, emu.perm, emu.ca, emu.sa, x, post_scale=d)
+    want = emu.apply(x) * d
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_mesh_scan_under_jit_and_vmap():
+    _, emu, rng = _random_mesh(24, 2)
+    x = jnp.asarray(rng.normal(size=(6, 24)).astype(np.float32))
+    want = np.asarray(emu.apply(x))
+    jat = jax.jit(lambda v: emu.apply(v, backend="pallas"))(x)
+    vm = jax.vmap(lambda v: emu.apply(v, backend="pallas"))(x)
+    np.testing.assert_allclose(np.asarray(jat), want, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vm), want, atol=1e-5)
+
+
+def test_unknown_backend_rejected():
+    _, emu, rng = _random_mesh(4, 3)
+    x = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="mesh backend"):
+        emu.apply(x, backend="bogus")
+
+
+# ------------------- full ONN pipeline, x64 acceptance bar ------------------
+
+PALLAS_ORACLE_X64 = textwrap.dedent("""
+    import json
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.photonics import mesh, onn
+    from repro.photonics.onn import ONNConfig
+
+    CFGS = [
+        ONNConfig(structure=(2, 64, 128, 64, 2), approx_layers=(2, 3),
+                  bits=4, n_servers=2, k_inputs=2),
+        ONNConfig(structure=(4, 32, 64, 32, 4), approx_layers=(),
+                  bits=8, n_servers=4, k_inputs=4),
+        ONNConfig(structure=(1, 4, 1), approx_layers=(), bits=2,
+                  n_servers=3, k_inputs=1),
+    ]
+    diffs = []
+    for i, cfg in enumerate(CFGS):
+        params = onn.project_approx(
+            onn.init_params(cfg, jax.random.PRNGKey(i)), cfg)
+        hw = onn.map_to_hardware(params, cfg)
+        progs = mesh.compile_hardware(hw)          # float64 under x64
+        a = np.random.default_rng(i).uniform(
+            0, cfg.in_scale, size=(32, cfg.structure[0]))
+        want = onn.apply_hardware(hw, a, cfg)
+        got = np.asarray(jax.jit(lambda x: mesh.apply_hardware(
+            progs, x, cfg, backend="pallas"))(jnp.asarray(a)))
+        diffs.append(float(np.abs(got - want).max()))
+    print(json.dumps(diffs))
+""")
+
+
+def test_pallas_oracle_parity_1e6_x64():
+    """Acceptance bar: the fused kernel (interpret mode on CPU) matches
+    the numpy apply_hardware oracle to <= 1e-6 on every ONNConfig
+    structure the suite uses, under x64."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", PALLAS_ORACLE_X64],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env(JAX_ENABLE_X64="1"))
+    assert r.returncode == 0, r.stderr[-2000:]
+    diffs = json.loads(r.stdout.strip().splitlines()[-1])
+    assert all(d <= 1e-6 for d in diffs), diffs
+
+
+# ----------------------- module / fidelity plumbing -------------------------
+
+def test_exact_identity_symbols_pallas_backend():
+    """ONNModule.symbols(fidelity='mesh', mesh_backend='pallas') keeps the
+    exact-identity transfer function exact (all 27 3-server codes)."""
+    module = ONNModule.exact_identity(bits=2, n_servers=3)
+    codes = np.stack(np.meshgrid(*([np.arange(3)] * 3),
+                                 indexing="ij")).reshape(3, -1)
+    sym = encoding.pam4_encode(jnp.asarray(codes), 2)
+    a = encoding.preprocess(sym, 2, module.cfg.k_inputs)
+    want = np.asarray(encoding.expected_avg_symbols(sym, 2))
+    got = np.asarray(module.symbols(a, fidelity="mesh",
+                                    mesh_backend="pallas"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mesh_scan_interpret_auto_agrees():
+    """Auto-detected interpret and forced interpret=True must agree (on
+    TPU this pits the compiled kernel against the interpreter)."""
+    _, emu, rng = _random_mesh(16, 4)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    auto = mesh_scan(emu.signs, emu.perm, emu.ca, emu.sa, x)
+    forced = mesh_scan(emu.signs, emu.perm, emu.ca, emu.sa, x,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced))
+
+
+# --------------------------- RunSpec threading ------------------------------
+
+def test_runspec_mesh_backend_flag_and_roundtrip():
+    from repro.api import RunSpec, SpecError
+    spec = RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                              "--fidelity", "mesh",
+                              "--mesh-backend", "pallas"])
+    assert spec.sync.photonics.mesh_backend == "pallas"
+    assert RunSpec.from_json(spec.to_json()) == spec
+    # the knob only applies to the mesh fidelity
+    with pytest.raises(SpecError, match="mesh-backend"):
+        RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                           "--mesh-backend", "pallas"])
+    # a bad value in a --spec file is a SpecError, not a raw ValueError
+    with pytest.raises(SpecError, match="invalid PhotonicsConfig"):
+        RunSpec.from_json_dict(
+            {"sync": {"photonics": {"mesh_backend": "bogus"}}})

@@ -148,8 +148,8 @@ FIDELITY_SCRIPT = textwrap.dedent("""
                        (4, 1))),
     }
 
-    def run(mesh, g, fidelity):
-        ph = PhotonicsConfig(fidelity=fidelity)
+    def run(mesh, g, fidelity, mesh_backend="xla"):
+        ph = PhotonicsConfig(fidelity=fidelity, mesh_backend=mesh_backend)
         sync = SyncConfig(mode="optinc", axes=("data",), bits=2, block=512,
                           error_feedback=True, photonics=ph)
         def f(x):
@@ -165,10 +165,12 @@ FIDELITY_SCRIPT = textwrap.dedent("""
     results = {}
     for name, (mesh, g) in cases.items():
         beh, beh_res = run(mesh, g, "behavioral")
-        for fid in ("onn", "mesh"):
-            out, res = run(mesh, g, fid)
-            results[f"{name}.{fid}"] = [float(np.abs(out - beh).max()),
-                                        float(np.abs(res - beh_res).max())]
+        for fid, backend in (("onn", "xla"), ("mesh", "xla"),
+                             ("mesh", "pallas")):
+            out, res = run(mesh, g, fid, backend)
+            results[f"{name}.{fid}.{backend}"] = [
+                float(np.abs(out - beh).max()),
+                float(np.abs(res - beh_res).max())]
     print(json.dumps(results))
 """)
 
@@ -179,7 +181,9 @@ def test_fidelity_mesh_reproduces_behavioral_multidevice():
     backend's averaged gradient (and error-feedback residual) bit-exactly
     — on a 3-device mesh with random gradients and a 4-device mesh with
     tie-free gradients (exactness is only claimed away from the PAM4
-    decision threshold; see EXPERIMENTS.md §Mesh emulation)."""
+    decision threshold; see EXPERIMENTS.md §Mesh emulation).  The mesh
+    fidelity is gated through BOTH executors (xla scan and the fused
+    pallas kernel, interpret mode off-TPU)."""
     from conftest import subprocess_env
     r = subprocess.run([sys.executable, "-c", FIDELITY_SCRIPT],
                        capture_output=True, text=True, timeout=600,
@@ -208,7 +212,12 @@ def test_runtime_resolves_exact_and_caches():
     assert runtime.get_module(ph, 2, 3) is m1
 
 
-def test_runtime_refuses_untrained_wide_bits():
+def test_runtime_refuses_untrained_wide_bits(monkeypatch):
+    # hermetic: a results/scenario1*_params.pkl produced by quickstart
+    # --scenario1 (e.g. the nightly trained-ONN job, or a local run) must
+    # not turn this into a successful resolution
+    monkeypatch.setattr(runtime, "RESULTS_PICKLES",
+                        ("results/_absent_for_test.pkl",))
     with pytest.raises(ValueError, match="no trained params"):
         runtime._build(PhotonicsConfig(fidelity="onn"), 8, 4)
 
