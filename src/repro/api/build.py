@@ -19,7 +19,7 @@ def _parts(spec: RunSpec, cfg, mesh):
 
 
 def warmup_photonics(spec: RunSpec):
-    """Resolve the in-network ONN for spec's photonic fidelity eagerly
+    """Resolve the in-network ONN(s) for spec's photonic fidelity eagerly
     (no-op for 'behavioral').  Sessions call this at build time so a slow
     params source ('train') or a missing one fails before the step loop,
     not in the middle of a shard_map trace."""
@@ -29,6 +29,10 @@ def warmup_photonics(spec: RunSpec):
     from ..photonics import runtime
     m = spec.mesh
     module = runtime.warmup(sync, m.pods * m.dp)
+    if sync.mode == "cascade":
+        # the photonic cascade runs a level-0 ONN per pod (N1 = dp) in
+        # addition to the full-N level-1 ONN resolved above
+        runtime.warmup(sync, m.dp)
     if m.fsdp and m.pods > 1:
         # the FSDP-sharded leaf group syncs over the pod axis only
         runtime.warmup(sync, m.pods)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from .. import compat  # noqa: F401  (jax API shims: set_mesh et al.)
 from ..checkpoint import CheckpointManager, load_checkpoint
 from ..checkpoint.ckpt import latest_step, read_manifest
+from ..collectives import (is_packed_residuals, pack_residuals,
+                           unpack_residuals)
 from ..data import SyntheticLM
 from ..models import lm
 from ..optim import adamw_init
@@ -73,12 +75,17 @@ class TrainSession:
         self.stop_requested = True
 
     def save_checkpoint(self, step: int | None = None):
-        """Persist params + optimizer + sync_state + the RunSpec manifest."""
+        """Persist params + optimizer + sync_state + the RunSpec manifest.
+        With ``sync.sparse_residuals`` the error-feedback residuals are
+        stored block-sparsely (only blocks with nonzero carry)."""
         if self.mgr is None:
             return
         step = (self.step - 1) if step is None else step
+        sync_state = self.sync_state
+        if self.sync.sparse_residuals and sync_state:
+            sync_state = pack_residuals(sync_state)
         self.mgr.save(step, self.params, self.opt_state,
-                      sync_state=self.sync_state,
+                      sync_state=sync_state,
                       extra={"run_spec": self.spec.to_json_dict(),
                              "arch": self.cfg.name, "sync": self.sync.mode})
 
@@ -95,11 +102,18 @@ class TrainSession:
         p_specs, o_specs = build.param_specs(self.spec, self.cfg)
         template = {"params": self.params, "opt": self.opt_state}
         specs = {"params": p_specs, "opt": o_specs}
-        has_sync = any(p.split("/", 1)[0] == "sync" for p in man["leaves"])
-        if self.sync_state and has_sync:
+        sync_paths = [p for p in man["leaves"]
+                      if p.split("/", 1)[0] == "sync"]
+        # block-sparse residual checkpoints store sync/<name>/{idx,val,
+        # shape}; either form restores regardless of the current
+        # sparse_residuals flag
+        sync_packed = bool(sync_paths) and all(
+            p.rsplit("/", 1)[-1] in ("idx", "val", "shape")
+            for p in sync_paths)
+        if self.sync_state and sync_paths and not sync_packed:
             template["sync"] = self.sync_state
             specs["sync"] = build.sync_state_specs(self.spec, self.mesh)
-        elif self.sync_state:
+        elif self.sync_state and not sync_paths:
             print("checkpoint predates sync_state persistence; "
                   "error-feedback residuals restart from zero", flush=True)
         tree, _ = load_checkpoint(c.dir, s, template, mesh=self.mesh,
@@ -107,8 +121,37 @@ class TrainSession:
         self.params, self.opt_state = tree["params"], tree["opt"]
         if "sync" in tree:
             self.sync_state = tree["sync"]
+        elif self.sync_state and sync_packed:
+            self.sync_state = self._load_packed_sync(c.dir, s)
         self.step = s + 1
         print(f"resumed from step {s}", flush=True)
+
+    def _load_packed_sync(self, direc, step: int) -> dict:
+        """Restore block-sparse error-feedback residuals: read the packed
+        sync/ subtree (via repro.checkpoint — the session never touches
+        the on-disk layout), expand to dense, place with the sync
+        sharding."""
+        from ..checkpoint.ckpt import read_subtree_arrays
+
+        packed = read_subtree_arrays(direc, step, "sync")
+        if not is_packed_residuals(packed):
+            raise ValueError(
+                f"checkpoint step {step} has a malformed block-sparse "
+                f"sync/ subtree (entries: "
+                f"{ {k: sorted(v) for k, v in packed.items()} })")
+        dense = unpack_residuals(packed)
+        specs = build.sync_state_specs(self.spec, self.mesh)
+        state = {}
+        for name, want in self.sync_state.items():
+            got = dense.get(name)
+            if got is None or got.shape != want.shape:
+                raise ValueError(
+                    f"packed sync_state {name!r} does not match the run: "
+                    f"checkpoint {None if got is None else got.shape} vs "
+                    f"run {want.shape}")
+            sharding = jax.sharding.NamedSharding(self.mesh, specs[name])
+            state[name] = jax.device_put(jnp.asarray(got), sharding)
+        return state
 
     # ------------------------------------------------------------ the loop
     def run_step(self, step: int) -> dict:

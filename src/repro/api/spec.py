@@ -174,16 +174,35 @@ class RunSpec:
         # (an unknown fidelity/params value is rejected by PhotonicsConfig
         # itself at construction time — _from_dict wraps that in SpecError)
         ph = self.sync.photonics
-        if ph.fidelity != "behavioral" and self.sync.mode != "optinc":
+        if (ph.fidelity != "behavioral"
+                and self.sync.mode not in ("optinc", "cascade")):
             raise SpecError(
-                f"--fidelity {ph.fidelity} is an optinc-backend knob "
-                f"(the hardware-in-the-loop ONN path); got --sync "
-                f"{self.sync.mode}")
+                f"--fidelity {ph.fidelity} is a photonic-backend knob "
+                f"(the hardware-in-the-loop ONN path of optinc/cascade); "
+                f"got --sync {self.sync.mode}")
         if ph.mesh_backend != "xla" and ph.fidelity != "mesh":
             raise SpecError(
                 f"--mesh-backend {ph.mesh_backend} selects the MZI-emulator "
                 f"executor and only applies to --fidelity mesh; got "
                 f"--fidelity {ph.fidelity}")
+        if (ph.fidelity != "behavioral" and self.sync.mode == "cascade"
+                and self.sync.bits > 2):
+            raise SpecError(
+                f"the photonic cascade carries the eq.-10 decimal part on "
+                f"the least-significant unit-P group, which is only on the "
+                f"ONN's grid for bits <= 2; got --bits {self.sync.bits} "
+                f"with --sync cascade --fidelity {ph.fidelity} (use "
+                f"--fidelity behavioral for wider widths)")
+        if ((ph.theta_drift_std > 0 or ph.shot_noise_std > 0)
+                and ph.fidelity != "mesh"):
+            raise SpecError(
+                f"--theta-drift-std/--shot-noise-std model the emulated MZI "
+                f"mesh (PhaseNoise) and only apply to --fidelity mesh; got "
+                f"--fidelity {ph.fidelity}")
+        if self.sync.sparse_residuals and not self.sync.error_feedback:
+            raise SpecError("--sparse-residuals compresses the checkpointed "
+                            "error-feedback residuals and needs "
+                            "--error-feedback")
         if self.sync.bucket_bytes <= 0:
             raise SpecError(f"bucket_bytes must be > 0, "
                             f"got {self.sync.bucket_bytes}")
@@ -253,15 +272,25 @@ class RunSpec:
                              "--sync cascade, else 1)")
         ap.add_argument("--bits", type=int, help="OptINC bit width B")
         ap.add_argument("--fidelity", choices=FIDELITIES,
-                        help="optinc emulation depth: behavioral Q(mean) | "
-                             "trained dense ONN | MZI mesh emulator "
-                             "(repro.photonics)")
+                        help="optinc/cascade emulation depth: behavioral "
+                             "Q(mean) | trained dense ONN | MZI mesh "
+                             "emulator (repro.photonics)")
         ap.add_argument("--mesh-backend", choices=MESH_BACKENDS,
                         help="fidelity=mesh executor: per-layer XLA scan | "
                              "fused Pallas VMEM kernel (kernels.mesh_scan)")
+        ap.add_argument("--theta-drift-std", type=float,
+                        help="PhaseNoise: thermal drift std (rad) on every "
+                             "programmed MZI phase (fidelity=mesh)")
+        ap.add_argument("--shot-noise-std", type=float,
+                        help="PhaseNoise: additive noise std on the mesh's "
+                             "analog outputs (fidelity=mesh)")
         ap.add_argument("--error-layers",
                         help="Table II key, e.g. '3,4,5,6' (ONN errors)")
         ap.add_argument("--error-feedback", action="store_true")
+        ap.add_argument("--sparse-residuals", action="store_true",
+                        help="checkpoint error-feedback residuals "
+                             "block-sparsely (only blocks with nonzero "
+                             "carry)")
         ap.add_argument("--fsdp", action="store_true",
                         help="shard params over the data axis (ZeRO-3)")
         ap.add_argument("--seq-parallel", action="store_true")
@@ -317,6 +346,10 @@ class RunSpec:
             ph_kw["fidelity"] = ns.pop("fidelity")
         if "mesh_backend" in ns:
             ph_kw["mesh_backend"] = ns.pop("mesh_backend")
+        if "theta_drift_std" in ns:
+            ph_kw["theta_drift_std"] = ns.pop("theta_drift_std")
+        if "shot_noise_std" in ns:
+            ph_kw["shot_noise_std"] = ns.pop("shot_noise_std")
         if ph_kw:
             sync_kw["photonics"] = dataclasses.replace(
                 self.sync.photonics, **ph_kw)
@@ -328,6 +361,8 @@ class RunSpec:
                                        if raw else ())
         if "error_feedback" in ns:
             sync_kw["error_feedback"] = ns.pop("error_feedback")
+        if "sparse_residuals" in ns:
+            sync_kw["sparse_residuals"] = ns.pop("sparse_residuals")
         if "lr" in ns:
             opt_kw["lr"] = ns.pop("lr")
         if "seq_len" in ns:

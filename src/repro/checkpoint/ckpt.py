@@ -99,6 +99,29 @@ def read_manifest(direc, step: int) -> dict:
     return json.loads(p.read_text())
 
 
+def read_subtree_arrays(direc, step: int, prefix: str) -> dict:
+    """Raw arrays of ONE checkpoint subtree as a nested dict (no template
+    needed — the structure comes from the stored leaf paths).
+
+    For subtrees whose shape the caller cannot know up front, e.g. the
+    block-sparse error-feedback residuals (``sync/<name>/{idx,val,shape}``,
+    variable nonzero-block count) restored by ``api.session``.  Keeping
+    this here means the session layer never touches the on-disk layout.
+    """
+    direc = pathlib.Path(direc) / f"step_{step}"
+    data = np.load(direc / "arrays.npz")
+    out = {}
+    for p in data.files:
+        parts = p.split("/")
+        if parts[0] != prefix:
+            continue
+        node = out
+        for seg in parts[1:-1]:
+            node = node.setdefault(seg, {})
+        node[parts[-1]] = data[p]
+    return out
+
+
 def latest_step(direc) -> int | None:
     direc = pathlib.Path(direc)
     if not direc.exists():

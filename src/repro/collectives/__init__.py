@@ -17,11 +17,13 @@ from .backends import (CascadeBackend, OptincBackend, PsumBackend,
 from .bucketizer import (DEFAULT_BUCKET_BYTES, BucketLayout, bucketize,
                          expected_buckets, make_layout, tree_bucketize,
                          tree_unbucketize, unbucketize)
-from .engine import SyncConfig, residual_size, sync_gradients
+from .engine import (SyncConfig, is_packed_residuals, pack_residuals,
+                     residual_size, sync_gradients, unpack_residuals)
 from .registry import available_backends, get_backend, register_backend
 
 __all__ = [
     "SyncConfig", "sync_gradients", "residual_size",
+    "pack_residuals", "unpack_residuals", "is_packed_residuals",
     "register_backend", "get_backend", "available_backends",
     "PsumBackend", "RingBackend", "OptincBackend", "CascadeBackend",
     "BucketLayout", "make_layout", "bucketize", "unbucketize",

@@ -8,7 +8,10 @@ reduce over the innermost sync axis and emit the average at resolution
 1/N1 — carried losslessly as the integer partial sum, the ICI analogue of
 the ``extra_symbols`` higher-precision PAM4 code — and level 2 reduces
 across the remaining axes and quantizes ONCE (eq. 10), so the result is
-bit-exact against core.cascade.carry_cascade / the one-shot eq. 8 average.
+bit-exact against photonics.cascade.carry_cascade / the one-shot eq. 8
+average.  The optinc and cascade photonic fidelities are both expressed
+through ``photonics.pipeline`` stage chains (one level for optinc, two
+carry-linked levels for cascade).
 """
 from __future__ import annotations
 
@@ -16,11 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.cascade import extra_symbols
 from ..photonics import error_model
+from ..photonics import pipeline as ph_pipeline
 from ..photonics import runtime as ph_runtime
-from ..photonics.encoding import (QuantSpec, compute_scale, group_symbols,
-                                  pam4_decode, pam4_encode)
+from ..photonics.cascade import extra_symbols
+from ..photonics.encoding import QuantSpec, compute_scale
 from .registry import register_backend
 
 _F32_TINY = 1.1754944e-38  # jnp.finfo(jnp.float32).tiny
@@ -151,36 +154,25 @@ def _quantized_sync(flat, cfg, key, scatter_plan):
     return out, flat - local
 
 
-def _photonic_sync(flat, cfg, key):
-    """The hardware-in-the-loop OptINC path (fidelity = 'onn' | 'mesh').
+def _noise_key(cfg, key, noise):
+    """The level key seeding PhaseNoise, folded OFF the per-bucket sync
+    key so Table-II error injection keeps drawing from the raw key
+    (zero-noise runs trace bit-identical jaxprs to the pre-noise paths).
+    A noisy run without a step key would silently train noise-free, so
+    that combination is rejected at trace time."""
+    if noise is None:
+        return None
+    if key is None:
+        raise ValueError(
+            "PhotonicsConfig noise (theta_drift_std/shot_noise_std > 0) "
+            "needs a per-step sync key; pass key= to sync_gradients")
+    return jax.random.fold_in(key, 1)
 
-    Instead of computing Q(mean) directly in the integer domain, the
-    B-bit codes are PAM4-encoded, every peer's symbol stream is gathered
-    into the emulated optical fabric, the preprocessing unit P merges
-    and averages them (paper III-A), and the averaged-gradient symbols
-    come out of the in-network ONN — either its trained dense forward
-    pass ('onn') or the phase-programmed MZI mesh emulator itself
-    ('mesh', repro.photonics.mesh).  The whole path is ordinary traced
-    jax, so it jit-compiles inside ``sync_gradients``.
-    """
-    n = _axis_size(cfg.axes)
-    module = ph_runtime.get_module(cfg.photonics, cfg.bits, n)
-    scale = _shared_scale(flat, cfg)
-    u, q, safe, spec = _encode(flat, scale, cfg)
-    flat_u = u.reshape(-1)
-    # unit P, distributed: each transceiver groups its OWN PAM4 symbols
-    # into base-4 values locally and the fabric's average is an exact
-    # integer psum / N (bit-identical to gathering all N symbol streams
-    # and taking preprocess()'s mean, without the N x memory blowup)
-    sym = pam4_encode(flat_u, cfg.bits)                        # (L, M)
-    vals = group_symbols(sym, cfg.bits, module.cfg.k_inputs)   # (L, K)
-    total = vals.astype(jnp.float32)
-    for ax in cfg.axes:
-        total = lax.psum(total, ax)
-    a = total / n                                   # unit P output (L, K)
-    out_sym = module.symbols(a, fidelity=cfg.photonics.fidelity,
-                             mesh_backend=cfg.photonics.mesh_backend)
-    u_avg = pam4_decode(out_sym)                         # (L,) int32
+
+def _finish_photonic(u_avg, u, q, safe, spec, flat, cfg, key):
+    """Shared epilogue of both photonic paths: Table-II error injection
+    on the averaged codes, dequantize, and the local quantization error
+    for error feedback."""
     if cfg.error_layers and key is not None:
         spec_err = error_model.TABLE_II[tuple(cfg.error_layers)]
         u_avg = error_model.inject(key, u_avg, spec_err, cfg.bits)
@@ -188,6 +180,82 @@ def _photonic_sync(flat, cfg, key):
                   flat.size)
     local = _decode(q, safe, spec, flat.size)
     return out, flat - local
+
+
+def _photonic_sync(flat, cfg, key):
+    """The hardware-in-the-loop OptINC path (fidelity = 'onn' | 'mesh').
+
+    Instead of computing Q(mean) directly in the integer domain, the
+    B-bit codes run ONE ``photonics.pipeline`` level over ``cfg.axes``:
+    PAM4-encode + unit-P grouping (Encode), the fabric's exact integer
+    average (Preprocess), the in-network ONN — trained dense forward
+    ('onn') or the phase-programmed MZI mesh emulator ('mesh'), with the
+    PhaseNoise model when configured (MeshApply) — then the transceiver
+    decision and symbol decode (Readout/Decode).  The whole path is
+    ordinary traced jax, so it jit-compiles inside ``sync_gradients``.
+    """
+    n = _axis_size(cfg.axes)
+    ph = cfg.photonics
+    module = ph_runtime.get_module(ph, cfg.bits, n)
+    scale = _shared_scale(flat, cfg)
+    u, q, safe, spec = _encode(flat, scale, cfg)
+    noise = ph_pipeline.PhaseNoise.from_config(ph)
+    pipe = ph_pipeline.level_pipeline(
+        module, cfg.bits, cfg.axes, fidelity=ph.fidelity,
+        mesh_backend=ph.mesh_backend, noise=noise)
+    u_avg = pipe.run(u.reshape(-1), key=_noise_key(cfg, key, noise)).data
+    return _finish_photonic(u_avg, u, q, safe, spec, flat, cfg, key)
+
+
+def _photonic_cascade_sync(flat, cfg, key):
+    """Two-level carry-cascade THROUGH the emulated optical fabric.
+
+    Two chained ``photonics.pipeline`` levels (paper III-C / eq. 10):
+    level 0 reduces within the pod (the innermost sync axis) and emits
+    the eq.-10 decimal part d off its analog readout as the pipeline
+    carry; level 1 reduces across the remaining axes with d merged into
+    its least-significant unit-P group and quantizes ONCE.  On a
+    100%-accuracy ONN the result is bit-exact against the behavioral
+    cascade (== the one-shot eq. 8 average); at lower ONN accuracy or
+    with PhaseNoise on, both levels' hardware error propagates
+    physically.  The level-0 ONN is resolved for N1 servers, the level-1
+    ONN for all N (its carried inputs sit on the full 1/N grid).
+    """
+    from ..photonics.encoding import num_symbols
+    if num_symbols(cfg.bits) != 1:
+        # the emulated carry rides the least-significant unit-P group,
+        # which only stays on the ONN's training grid for the
+        # single-symbol transfer function; wider widths need
+        # cascade-trained ONNs with a dedicated extra input (ROADMAP)
+        raise ValueError(
+            f"the photonic cascade (fidelity={cfg.photonics.fidelity!r}) "
+            f"supports bits <= 2 (one PAM4 symbol per value, where the "
+            f"eq.-10 carry is exactly representable on the unit-P grid); "
+            f"got bits={cfg.bits}.  Use fidelity='behavioral' for wider "
+            f"bit widths")
+    lvl1_ax = cfg.axes[-1]
+    lvl2_axes = cfg.axes[:-1]
+    n1 = lax.axis_size(lvl1_ax)
+    n = _axis_size(cfg.axes)
+    ph = cfg.photonics
+    mod0 = ph_runtime.get_module(ph, cfg.bits, n1)
+    mod1 = ph_runtime.get_module(ph, cfg.bits, n)
+    scale = _shared_scale(flat, cfg)
+    u, q, safe, spec = _encode(flat, scale, cfg)
+    noise = ph_pipeline.PhaseNoise.from_config(ph)
+    nk = _noise_key(cfg, key, noise)
+    nk0 = nk1 = None
+    if nk is not None:
+        nk0, nk1 = jax.random.split(nk)
+    p0 = ph_pipeline.level_pipeline(
+        mod0, cfg.bits, (lvl1_ax,), fidelity=ph.fidelity,
+        mesh_backend=ph.mesh_backend, noise=noise, emit_carry=True)
+    p1 = ph_pipeline.level_pipeline(
+        mod1, cfg.bits, lvl2_axes, fidelity=ph.fidelity,
+        mesh_backend=ph.mesh_backend, noise=noise)
+    lvl0 = p0.run(u.reshape(-1), key=nk0)
+    u_avg = p1.run(lvl0.data, key=nk1, frac=lvl0.frac).data
+    return _finish_photonic(u_avg, u, q, safe, spec, flat, cfg, key)
 
 
 class OptincBackend:
@@ -224,11 +292,16 @@ class CascadeBackend:
 
     cfg.axes = (level2_axis, ..., level1_axis): the LAST axis is the
     within-pod level-1 OptINC group; the rest are the cross-pod level-2
-    fabric.  Level 1 reduce-scatters the B-bit codes and keeps the exact
-    integer partial sum (= N1 x the level-1 average at resolution 1/N1 —
-    the decimal part d of eq. 10 carried in ceil(log4 N1) extra PAM4
-    symbols, here as dtype headroom).  Level 2 sums the carried values
-    and quantizes once, so the result equals the one-shot eq. 8 average.
+    fabric.  Behavioral: level 1 reduce-scatters the B-bit codes and
+    keeps the exact integer partial sum (= N1 x the level-1 average at
+    resolution 1/N1 — the decimal part d of eq. 10 carried in
+    ceil(log4 N1) extra PAM4 symbols, here as dtype headroom); level 2
+    sums the carried values and quantizes once, so the result equals the
+    one-shot eq. 8 average.  fidelity='onn'|'mesh' runs BOTH levels
+    through the emulated fabric instead — two chained
+    ``photonics.pipeline`` levels with the eq.-10 carry threaded through
+    their Readout/Encode stages (``_photonic_cascade_sync``), bit-exact
+    against this behavioral path on a 100%-accuracy ONN.
     """
     name = "cascade"
 
@@ -239,9 +312,7 @@ class CascadeBackend:
                 f"got {cfg.axes!r}; run with a (pod, data) mesh")
         ph = getattr(cfg, "photonics", None)
         if ph is not None and ph.fidelity != "behavioral":
-            raise ValueError(
-                "the cascade backend is behavioral-only; use mode='optinc' "
-                f"for fidelity={ph.fidelity!r}")
+            return _photonic_cascade_sync(flat, cfg, key)
         lvl1_ax = cfg.axes[-1]
         lvl2_axes = cfg.axes[:-1]
         n1 = lax.axis_size(lvl1_ax)

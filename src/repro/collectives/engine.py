@@ -18,6 +18,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..photonics.config import PhotonicsConfig
 from .bucketizer import (DEFAULT_BUCKET_BYTES, bucketize, flatten_concat,
@@ -34,9 +35,13 @@ class SyncConfig:
     error_layers: tuple = ()         # Table II key, () = ideal ONN
     error_feedback: bool = False     # beyond-paper residual accumulation
     bucket_bytes: int = DEFAULT_BUCKET_BYTES  # fused-bucket wire payload
-    # emulation fidelity of the optinc backend: behavioral | onn | mesh
-    # (repro.photonics; 'onn'/'mesh' put the trained ONN / the MZI mesh
-    # emulator itself inside the jit-compiled collective)
+    # checkpoint the residual vectors block-sparsely (only blocks with a
+    # nonzero carry are stored — pack_residuals/unpack_residuals), cutting
+    # checkpoint size for mostly-exact backends; runtime state stays dense
+    sparse_residuals: bool = False
+    # emulation fidelity of the optinc/cascade backends: behavioral | onn
+    # | mesh (repro.photonics; 'onn'/'mesh' put the trained ONN / the MZI
+    # mesh emulator itself inside the jit-compiled collective)
     photonics: PhotonicsConfig = PhotonicsConfig()
 
 
@@ -44,6 +49,59 @@ def residual_size(leaves) -> int:
     """Length of the error-feedback residual vector for a leaf list
     (arrays or ShapeDtypeStructs): the concatenated element count."""
     return sum(int(l.size) for l in leaves)
+
+
+# ------------------- block-sparse residual checkpointing -------------------
+#
+# Error-feedback residuals are dense f32 vectors over the concatenated
+# leaf space at RUNTIME (jit-friendly), but for mostly-exact backends
+# (high bit widths, zero-gradient blocks, exact modes degraded from
+# cascade) most blocks carry exactly zero quantization error.  With
+# ``SyncConfig.sparse_residuals`` the checkpoint stores, per residual
+# vector, only the blocks with a nonzero carry: {"idx", "val", "shape"}.
+# ``shape`` = (size, block); the round trip is lossless by construction.
+
+RESIDUAL_BLOCK = 4096  # f32 elements per stored block (16 KiB)
+
+
+def pack_residuals(state: dict, block: int = RESIDUAL_BLOCK) -> dict:
+    """Dense sync_state ({name: 1-D f32}) -> block-sparse host-side form."""
+    packed = {}
+    for name, vec in state.items():
+        v = np.asarray(vec, np.float32).reshape(-1)
+        n = v.size
+        nb = -(-n // block) if n else 0
+        full = np.zeros((nb * block,), np.float32)
+        full[:n] = v
+        blocks = full.reshape(nb, block)
+        idx = np.flatnonzero(np.any(blocks != 0.0, axis=1)).astype(np.int32)
+        packed[name] = {"idx": idx, "val": blocks[idx],
+                        "shape": np.array([n, block], np.int64)}
+    return packed
+
+
+def unpack_residuals(packed: dict) -> dict:
+    """Block-sparse checkpoint form -> dense numpy sync_state."""
+    state = {}
+    for name, entry in packed.items():
+        n, block = (int(x) for x in np.asarray(entry["shape"]))
+        nb = -(-n // block) if n else 0
+        full = np.zeros((nb * block,), np.float32)
+        idx = np.asarray(entry["idx"], np.int64)
+        if idx.size:
+            full.reshape(nb, block)[idx] = np.asarray(entry["val"],
+                                                      np.float32)
+        state[name] = full[:n]
+    return state
+
+
+def is_packed_residuals(tree) -> bool:
+    """True when a checkpointed sync subtree is in the block-sparse form
+    (each entry a {"idx", "val", "shape"} dict) rather than dense vectors
+    — resume handles either form regardless of the current flag."""
+    return bool(tree) and all(
+        isinstance(v, dict) and set(v) == {"idx", "val", "shape"}
+        for v in tree.values())
 
 
 def sync_gradients(grads, cfg: SyncConfig, key: jax.Array | None = None,

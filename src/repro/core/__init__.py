@@ -1,6 +1,6 @@
 # Paper-core remainder.  The optical subsystem (encoding, ONN, MZI
-# programming + mesh emulator, training, area/error models) moved to
-# repro.photonics; the modules of that name left here are thin
-# deprecation re-export shims.  Still first-class here: cascade.py
-# (two-level carry-cascade math, eq. 8-10) and collective.py (the
-# pre-refactor import surface of repro.collectives).
+# programming + mesh emulator, training, area/error models — and, since
+# the pipeline refactor, cascade.py's two-level carry-cascade math) moved
+# to repro.photonics; the modules of that name left here are thin
+# deprecation re-export shims.  Still first-class here: collective.py
+# (the pre-refactor import surface of repro.collectives).

@@ -22,6 +22,18 @@
       --smoke-config --sync optinc --bits 2 --fidelity mesh \
       --mesh-backend pallas
 
+  # two-level photonic cascade: BOTH reduction levels run the mesh
+  # emulator, the eq.-10 carry symbol threaded between them (bit-exact
+  # vs --fidelity behavioral on the built-in exact ONN at bits<=2)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync cascade --mesh 2x1 --bits 2 --fidelity mesh
+
+  # thermal drift + shot noise on the emulated mesh (PhaseNoise model,
+  # seeded from the per-step key: reproducible, identical across hosts)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync optinc --bits 2 --fidelity mesh \
+      --theta-drift-std 0.02 --shot-noise-std 0.01
+
   # or describe the whole scenario declaratively:
   PYTHONPATH=src python -m repro.launch.train --spec my_run.json
 

@@ -13,26 +13,32 @@ across ``repro.core``; this package is its single home, split by layer:
   training.py     hardware-aware two-stage training (III-B, eq. 7)
   dataset.py      ONN training grids (III-A/III-C)
   error_model.py  Table-II error injection
+  cascade.py      two-level carry-cascade math (III-C, eq. 8-10)
   module.py       ONNModule: params + compiled mesh programs, per fidelity
   config.py       PhotonicsConfig: the runtime fidelity knob
+  pipeline.py     SyncPipeline: Encode->Preprocess->MeshApply->Readout->
+                  Decode stages + the PhaseNoise model — the composable
+                  photonic reduction the collective backends run
   runtime.py      cached ONN resolution for the collective engine
 
-``repro.core.{onn,mzi,approx,training,error_model,encoding,area,dataset}``
-re-export this surface for backwards compatibility.
+``repro.core.{onn,mzi,approx,training,error_model,encoding,area,dataset,
+cascade}`` re-export this surface for backwards compatibility.
 """
-from . import (approx, area, dataset, encoding, error_model, mesh, mzi, onn,
-               training)
+from . import (approx, area, cascade, dataset, encoding, error_model, mesh,
+               mzi, onn, pipeline, training)
 from .config import (FIDELITIES, MESH_BACKENDS, PhotonicsConfig,
                      resolve_interpret)
 from .mesh import MZIMesh, compile_hardware
 from .module import ONNModule
 from .onn import ONNConfig, Transceiver
+from .pipeline import PhaseNoise, SyncPipeline, level_pipeline
 from .runtime import get_module, put_module, warmup
 
 __all__ = [
     "PhotonicsConfig", "FIDELITIES", "MESH_BACKENDS", "resolve_interpret",
     "ONNConfig", "ONNModule", "MZIMesh", "Transceiver",
+    "PhaseNoise", "SyncPipeline", "level_pipeline",
     "compile_hardware", "get_module", "put_module", "warmup",
-    "approx", "area", "dataset", "encoding", "error_model", "mesh", "mzi",
-    "onn", "training",
+    "approx", "area", "cascade", "dataset", "encoding", "error_model",
+    "mesh", "mzi", "onn", "pipeline", "training",
 ]

@@ -58,6 +58,15 @@ class PhotonicsConfig:
       'results'  results/scenario1*_params.pkl (quickstart --onn output)
       'train'    hardware-aware training at resolve time (train_epochs)
       'auto'     exact if possible, else results, else error with guidance
+
+    ``theta_drift_std`` / ``shot_noise_std`` parameterize the PhaseNoise
+    model of the mesh emulator (``pipeline.PhaseNoise``): a per-apply
+    thermal drift on every programmed MZI phase (theta -> theta + eps,
+    eps ~ N(0, theta_drift_std)) and white photodetector noise on the
+    analog outputs.  Both are seeded from the per-step sync key, so runs
+    are reproducible and identical across processes; 0.0 disables each
+    term statically (the zero-noise path is bit-exact with the
+    noise-free emulator).  Only meaningful at fidelity='mesh'.
     """
     fidelity: str = "behavioral"
     structure: tuple = ()          # () = auto from bits/k_inputs
@@ -67,6 +76,8 @@ class PhotonicsConfig:
     train_epochs: int = 0          # 'train' source budget (0 = refuse)
     seed: int = 0
     mesh_backend: str = "xla"      # fidelity='mesh' executor: xla | pallas
+    theta_drift_std: float = 0.0   # thermal drift on programmed phases (rad)
+    shot_noise_std: float = 0.0    # additive noise on analog outputs
 
     def __post_init__(self):
         if self.fidelity not in FIDELITIES:
@@ -78,3 +89,8 @@ class PhotonicsConfig:
         if self.mesh_backend not in MESH_BACKENDS:
             raise ValueError(f"mesh_backend must be one of {MESH_BACKENDS}, "
                              f"got {self.mesh_backend!r}")
+        if self.theta_drift_std < 0.0 or self.shot_noise_std < 0.0:
+            raise ValueError(
+                f"noise stds must be >= 0, got theta_drift_std="
+                f"{self.theta_drift_std!r} shot_noise_std="
+                f"{self.shot_noise_std!r}")

@@ -154,13 +154,29 @@ def preprocess(sym_stack: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
     return jnp.mean(vals.astype(jnp.float32), axis=0)
 
 
+def group_value(a: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """Collapse K grouped unit-P inputs (..., K) back to the represented
+    value: sum_k A_k * (4^g)^(K-1-k).  For K = 1 this is exact pass-through
+    (weight 1.0); the photonic pipeline uses it to track the exact carried
+    value of eq. 10."""
+    g = preprocess_group_size(bits, k)
+    w = (4.0 ** g) ** jnp.arange(k - 1, -1, -1)
+    return jnp.sum(a.astype(jnp.float32) * w, axis=-1)
+
+
+def symbol_value(sym: jnp.ndarray) -> jnp.ndarray:
+    """Analog PAM4 symbol stream (..., M, MSB first) -> value, without the
+    transceiver decision: sum_m y_m * 4^(M-1-m).  The float counterpart of
+    ``pam4_decode`` for pre-readout (possibly noisy) ONN outputs."""
+    m = sym.shape[-1]
+    w = (4.0 ** jnp.arange(m - 1, -1, -1)).astype(jnp.float32)
+    return jnp.sum(sym.astype(jnp.float32) * w, axis=-1)
+
+
 def oracle_from_preprocessed(a: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
     """Exact ONN transfer function: preprocessed inputs A (..., K) ->
     PAM4 symbols (..., M) of the quantized average."""
-    g = preprocess_group_size(bits, k)
-    w = (4.0 ** g) ** jnp.arange(k - 1, -1, -1)
-    total = jnp.sum(a.astype(jnp.float32) * w, axis=-1)
-    u = jnp.round(total).astype(jnp.int32)
+    u = jnp.round(group_value(a, bits, k)).astype(jnp.int32)
     return pam4_encode(u, bits)
 
 

@@ -137,7 +137,8 @@ class MZIMesh:
     # --------------------------------------------------------- apply
     def apply(self, x: jnp.ndarray, transpose: bool = False,
               backend: str | None = None,
-              post_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+              post_scale: jnp.ndarray | None = None,
+              noise=None, key=None) -> jnp.ndarray:
         """o @ x (or o^T @ x when ``transpose``) over the last axis.
 
         ``backend`` selects the executor (``PhotonicsConfig.mesh_backend``):
@@ -146,11 +147,25 @@ class MZIMesh:
         (``kernels.mesh_scan``).  ``post_scale`` is an optional diagonal
         epilogue multiplied into the output — on the pallas path it is
         fused into the kernel's final VPU pass.
+
+        ``noise`` (a ``pipeline.PhaseNoise``) + ``key`` inject the
+        thermal/shot noise model: the theta drift perturbs the (ca, sa)
+        coefficient stacks BEFORE dispatching to either executor (so xla
+        and pallas run the same perturbed program), and the shot noise
+        lands on the analog output.  Both are no-ops (statically — the
+        traced jaxpr is unchanged) when the stds are 0 or no key is
+        given.
         """
+        perm, ca, sa = self.perm, self.ca, self.sa
+        k_shot = None
+        if noise is not None and noise.enabled and key is not None:
+            k_theta, k_shot = jax.random.split(key)
+            ca, sa = noise.perturb(k_theta, perm, ca, sa)
         if _check_backend(backend) == "pallas":
             from ..kernels.mesh_scan import mesh_scan
-            return mesh_scan(self.signs, self.perm, self.ca, self.sa, x,
-                             transpose=transpose, post_scale=post_scale)
+            y = mesh_scan(self.signs, perm, ca, sa, x,
+                          transpose=transpose, post_scale=post_scale)
+            return y if k_shot is None else noise.shot(k_shot, y)
         dt = jnp.result_type(x.dtype, self.ca.dtype)
         y = x.astype(dt)
         if not transpose:
@@ -165,13 +180,12 @@ class MZIMesh:
                  + sgn * sa.astype(dt) * jnp.take(y, perm, axis=-1))
             return y, None
 
-        y, _ = lax.scan(body, y, (self.perm, self.ca, self.sa),
-                        reverse=transpose)
+        y, _ = lax.scan(body, y, (perm, ca, sa), reverse=transpose)
         if transpose:
             y = y * self.signs.astype(dt)
         if post_scale is not None:
             y = y * post_scale.astype(dt)
-        return y
+        return y if k_shot is None else noise.shot(k_shot, y)
 
     def matrix(self) -> jnp.ndarray:
         """Rebuild the dense orthogonal matrix (jax ``mzi.reconstruct``)."""
@@ -212,20 +226,28 @@ def _stack_meshes(meshes):
 
 def _apply_stacked(stacked: MZIMesh, x: jnp.ndarray, x_block_axis: bool,
                    backend: str | None = None,
-                   post_scale: jnp.ndarray | None = None):
+                   post_scale: jnp.ndarray | None = None,
+                   noise=None, key=None):
     """vmap a stacked mesh over its block axis.  ``x`` is shared across
     blocks (tall layers) or carries its own block axis at -2 (wide
     layers).  ``post_scale`` (B, dim) is each block's diagonal epilogue
-    (fused in-kernel on the pallas backend).  Returns (..., B, dim)."""
-    def one(signs, perm, ca, sa, xb, ps):
+    (fused in-kernel on the pallas backend).  With a PhaseNoise model the
+    key is split so every block draws independent noise.
+    Returns (..., B, dim)."""
+    keys = None
+    if noise is not None and noise.enabled and key is not None:
+        keys = jax.random.split(key, stacked.signs.shape[0])
+
+    def one(signs, perm, ca, sa, xb, ps, k):
         return MZIMesh(stacked.dim, 0, signs, perm, ca, sa).apply(
-            xb, backend=backend, post_scale=ps)
+            xb, backend=backend, post_scale=ps, noise=noise, key=k)
 
     out = jax.vmap(one,
                    in_axes=(0, 0, 0, 0, -2 if x_block_axis else None,
-                            None if post_scale is None else 0),
+                            None if post_scale is None else 0,
+                            None if keys is None else 0),
                    out_axes=0)(stacked.signs, stacked.perm, stacked.ca,
-                               stacked.sa, x, post_scale)
+                               stacked.sa, x, post_scale, keys)
     return jnp.moveaxis(out, 0, -2)
 
 
@@ -253,15 +275,20 @@ class SVDLayerProgram:
         return (self.u.num_rotations + self.v.num_rotations
                 + int(self.sigma.shape[0]))
 
-    def apply(self, x: jnp.ndarray, backend: str | None = None) -> jnp.ndarray:
+    def apply(self, x: jnp.ndarray, backend: str | None = None,
+              noise=None, key=None) -> jnp.ndarray:
+        kv = ku = None
+        if key is not None:
+            kv, ku = jax.random.split(key)
         m, _ = self.shape
         k = self.sigma.shape[0]
-        z = self.v.apply(x, transpose=True, backend=backend)[..., :k]
+        z = self.v.apply(x, transpose=True, backend=backend,
+                         noise=noise, key=kv)[..., :k]
         z = z * self.sigma
         if m > k:
             z = jnp.concatenate(
                 [z, jnp.zeros(z.shape[:-1] + (m - k,), z.dtype)], axis=-1)
-        return self.u.apply(z, backend=backend) + self.b
+        return self.u.apply(z, backend=backend, noise=noise, key=ku) + self.b
 
 
 @jax.tree_util.register_pytree_node_class
@@ -285,19 +312,22 @@ class ApproxLayerProgram:
         n_blocks, s = self.d.shape
         return self.meshes.num_rotations + n_blocks * s
 
-    def apply(self, x: jnp.ndarray, backend: str | None = None) -> jnp.ndarray:
+    def apply(self, x: jnp.ndarray, backend: str | None = None,
+              noise=None, key=None) -> jnp.ndarray:
         # the Sigma_a diagonal rides as the meshes' fused epilogue (the
         # pallas kernel applies it in VMEM before the HBM write)
         m, n = self.shape
         s = min(m, n)
         if m >= n:
             ys = _apply_stacked(self.meshes, x, x_block_axis=False,
-                                backend=backend, post_scale=self.d)
+                                backend=backend, post_scale=self.d,
+                                noise=noise, key=key)
             y = ys.reshape(x.shape[:-1] + (m,))
         else:
             xs = x.reshape(x.shape[:-1] + (n // s, s))
             ys = _apply_stacked(self.meshes, xs, x_block_axis=True,
-                                backend=backend, post_scale=self.d)
+                                backend=backend, post_scale=self.d,
+                                noise=noise, key=key)
             y = jnp.sum(ys, axis=-2)
         return y + self.b
 
@@ -329,13 +359,17 @@ def compile_hardware(hw, dtype=None):
 
 
 def apply_hardware(programs, a: jnp.ndarray, cfg,
-                   backend: str | None = None) -> jnp.ndarray:
+                   backend: str | None = None,
+                   noise=None, key=None) -> jnp.ndarray:
     """Jittable forward pass through the compiled MZI meshes — the fast
     counterpart of ``onn.apply_hardware`` (the numpy oracle).  ``backend``
-    selects the layer executor (``PhotonicsConfig.mesh_backend``)."""
+    selects the layer executor (``PhotonicsConfig.mesh_backend``);
+    ``noise`` + ``key`` thread the PhaseNoise model into every layer's
+    meshes (one key per layer, folded off ``key``)."""
     x = a / jnp.asarray(cfg.in_scale, programs[0].b.dtype)
     for li, prog in enumerate(programs):
-        x = prog.apply(x, backend=backend)
+        k = None if key is None else jax.random.fold_in(key, li)
+        x = prog.apply(x, backend=backend, noise=noise, key=k)
         if li < len(programs) - 1:
             x = jax.nn.relu(x)
     return x * cfg.out_scale

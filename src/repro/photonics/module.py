@@ -52,15 +52,23 @@ class ONNModule:
         """Analytically exact ONN for the single-symbol transfer function.
 
         With M = num_symbols(bits) == 1 and K = 1 the behavioural target
-        Q(mean) is just round(A), so a (1, 4, 1) identity network (positive
-        weights keep ReLU transparent on A >= 0) + transceiver rounding IS
-        the oracle — 100% accuracy by construction, no training needed.
+        Q(mean) is just round(A), so a (1, 4, 1) identity network
+        + transceiver rounding IS the oracle — 100% accuracy by
+        construction, no training needed.
 
-        Exactness caveat: when A lands EXACTLY on the decision threshold
-        (k + 0.5, possible only for even N with odd symbol sums) the
-        analog output sits on the boundary and float/emulation noise may
-        round it either way — the physical transceiver's own ±1 LSB
-        threshold ambiguity.  Odd N can never tie.
+        The weights are the WIRE-EXACT form: the value rides a single
+        waveguide (w1 = e1, w2 = e1^T), whose SVD factors are exact 0/1
+        matrices, so Givens programming emits ZERO rotations and the mesh
+        emulator (both executors) passes the value through exactly — the
+        only float ops left are the in/out scale pair a/3 * 3, which is
+        exact at every half-integer of [0, 2^B - 2] under both division
+        lowerings (true divide and XLA's multiply-by-reciprocal).  PAM4
+        decision ties (A == k + 0.5, even-N meshes and the carry-cascade's
+        quarter grids) therefore resolve exactly like ``jnp.round``'s
+        round-half-even — bit-identical to the behavioral backend — where
+        the previous all-ones weights left ties at the mercy of ~1 ulp
+        Givens rotation noise.  (ReLU stays transparent: inputs are
+        >= 0, and the eq.-10 carry keeps merged values >= 0.)
         """
         if num_symbols(bits) != 1:
             raise ValueError(
@@ -68,11 +76,10 @@ class ONNModule:
                 f"(bits <= 2), got bits={bits}")
         cfg = ONNConfig(structure=(1, 4, 1), approx_layers=(), bits=bits,
                         n_servers=n_servers, k_inputs=1)
-        # hidden = x * [1,1,1,1]; out = hidden @ [1/4 ...] = x, exactly in f32
-        params = [{"w": np.ones((4, 1), np.float32),
-                   "b": np.zeros((4,), np.float32)},
-                  {"w": np.full((1, 4), 0.25, np.float32),
-                   "b": np.zeros((1,), np.float32)}]
+        w1 = np.zeros((4, 1), np.float32)
+        w1[0, 0] = 1.0
+        params = [{"w": w1, "b": np.zeros((4,), np.float32)},
+                  {"w": w1.T.copy(), "b": np.zeros((1,), np.float32)}]
         return cls(cfg, params)
 
     @classmethod
@@ -104,17 +111,19 @@ class ONNModule:
             self._programs = mesh_mod.compile_hardware(hw)
         return self._programs
 
-    def apply_mesh(self, a: jnp.ndarray,
-                   backend: str | None = None) -> jnp.ndarray:
+    def apply_mesh(self, a: jnp.ndarray, backend: str | None = None,
+                   noise=None, key=None) -> jnp.ndarray:
         """Forward pass through the phase-programmed mesh emulator.
-        ``backend`` picks the layer executor (xla scan | fused pallas)."""
+        ``backend`` picks the layer executor (xla scan | fused pallas);
+        ``noise`` + ``key`` inject the PhaseNoise model (pipeline.py)."""
         return mesh_mod.apply_hardware(self.programs, a, self.cfg,
-                                       backend=backend)
+                                       backend=backend, noise=noise, key=key)
 
     def symbols(self, a: jnp.ndarray, fidelity: str = "onn",
-                mesh_backend: str | None = None) -> jnp.ndarray:
+                mesh_backend: str | None = None,
+                noise=None, key=None) -> jnp.ndarray:
         """Analog forward pass + transceiver readout -> PAM4 symbols."""
-        out = (self.apply_mesh(a, backend=mesh_backend)
+        out = (self.apply_mesh(a, backend=mesh_backend, noise=noise, key=key)
                if fidelity == "mesh" else self.apply(a))
         return self.transceiver.readout(out)
 

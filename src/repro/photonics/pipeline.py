@@ -1,0 +1,242 @@
+"""Stage-composable photonic sync pipeline (paper III-A / III-C).
+
+One level of the OptINC fabric — what ``collectives.backends`` used to
+inline as ``_photonic_sync`` — is five small jittable stages:
+
+    Encode      offset-binary codes -> PAM4 symbols -> grouped unit-P
+                input values (eq. 2); an incoming eq.-10 carry rides on
+                the least-significant group
+    Preprocess  unit P: exact integer psum over the level's mesh axes / N
+    MeshApply   the in-network ONN — trained dense forward ('onn') or the
+                phase-programmed MZI mesh emulator ('mesh'), with the
+                PhaseNoise model on the programmed thetas / analog outputs
+    Readout     transceiver decision stage; with ``emit_carry`` the eq.-10
+                decimal part d = analog value - decoded value leaves the
+                level as ``Carry.frac``
+    Decode      PAM4 symbols -> offset-binary integer codes
+
+Each stage is a frozen dataclass with ``apply(carry, key) -> carry``; a
+``SyncPipeline`` folds a per-stage key off the level key and runs the
+stages in order.  The single-level optinc backend is ONE pipeline over
+``cfg.axes``; the two-level carry-cascade is TWO chained pipelines — the
+level-0 (intra-pod) pipeline emits its carry, the level-1 (inter-pod)
+pipeline consumes it — so both photonic fidelities run the ONN/mesh
+emulator at every cascade level (closing the last behavioral-only gap).
+
+Carry-symbol semantics (eq. 10): a level that emits a carry reads the
+decimal part d off its ANALOG outputs (``encoding.symbol_value``), i.e.
+the same physical quantity its extra, higher-resolution PAM4 symbol
+would encode — so mesh noise and ONN inaccuracy propagate into d
+physically, while on a 100%-accuracy ONN ``decoded + d`` equals the
+exact unit-P average and the chained pipelines reproduce the one-shot
+eq. 8 quantization bit-exactly (the behavioral cascade).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .encoding import group_symbols, pam4_decode, pam4_encode, symbol_value
+
+
+class Carry(NamedTuple):
+    """What flows between stages: the payload and the eq.-10 carry."""
+    data: jnp.ndarray              # stage payload (codes/values/symbols)
+    frac: jnp.ndarray | None = None  # decimal carry d, in value units
+
+
+# --------------------------------------------------------------- noise
+
+@dataclasses.dataclass(frozen=True)
+class PhaseNoise:
+    """Thermal drift + shot noise on the emulated MZI mesh.
+
+    ``theta_drift_std`` perturbs every programmed phase theta -> theta +
+    eps with one eps ~ N(0, std) PER ROTATION and apply (an MZI has one
+    thermal phase shifter, so its two wires must rotate coherently);
+    ``shot_noise_std`` adds white photodetector noise to the analog
+    outputs after the optical path.  Both draw from the key threaded
+    through ``MZIMesh.apply`` (derived from the per-step sync key), so
+    noise is reproducible and identical across processes.  A zero std
+    disables its term STATICALLY — the zero-noise path traces exactly
+    the jaxpr of the noise-free emulator, keeping it bit-exact.
+    """
+    theta_drift_std: float = 0.0
+    shot_noise_std: float = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.theta_drift_std > 0.0 or self.shot_noise_std > 0.0
+
+    @classmethod
+    def from_config(cls, ph) -> "PhaseNoise | None":
+        """PhotonicsConfig -> PhaseNoise, or None when both stds are 0."""
+        noise = cls(theta_drift_std=ph.theta_drift_std,
+                    shot_noise_std=ph.shot_noise_std)
+        return noise if noise.enabled else None
+
+    def perturb(self, key, perm, ca, sa):
+        """Drift the (L, m) coefficient stacks of a compiled mesh.
+
+        A rotation on wires (i, j) stores ca = cos(theta) on both wires
+        and sa = -+ sin(theta); drawing one gaussian per wire and
+        symmetrizing over the partner permutation gives one delta per
+        rotation, and the antisymmetric sign(wire - partner) assignment
+        turns the per-wire update
+            ca' = ca cos(eps) - sa sin(eps)
+            sa' = sa cos(eps) + ca sin(eps)
+        into a coherent theta -> theta + delta on both wires.  Untouched
+        wires (perm == self) get eps = 0 exactly, so identity padding
+        stays identity.
+        """
+        if self.theta_drift_std <= 0.0 or key is None:
+            return ca, sa
+        g = jax.random.normal(key, perm.shape, ca.dtype)
+        # (g_i + g_j)/sqrt(2) of two iid N(0,1) draws is N(0,1) again, so
+        # the per-rotation drift really has std = theta_drift_std
+        delta = (0.5 ** 0.5) * (g + jnp.take_along_axis(g, perm, axis=-1))
+        wires = jnp.arange(perm.shape[-1], dtype=perm.dtype)
+        sign = jnp.sign(wires - perm).astype(ca.dtype)
+        eps = jnp.asarray(self.theta_drift_std, ca.dtype) * delta * sign
+        ce, se = jnp.cos(eps), jnp.sin(eps)
+        return ca * ce - sa * se, sa * ce + ca * se
+
+    def shot(self, key, y):
+        """Additive photodetector noise on the analog mesh outputs."""
+        if self.shot_noise_std <= 0.0 or key is None:
+            return y
+        return y + jnp.asarray(self.shot_noise_std, y.dtype) * \
+            jax.random.normal(key, y.shape, y.dtype)
+
+
+# --------------------------------------------------------------- stages
+
+@dataclasses.dataclass(frozen=True)
+class Encode:
+    """Offset-binary integer codes -> grouped unit-P input values.
+
+    ``carry.data``: (L,) int codes in [0, 2^B - 2].  An incoming eq.-10
+    carry (``carry.frac``, value units) is merged into the
+    least-significant group — the higher-resolution extra PAM4 symbol of
+    the cascade's level-1 output, weight (4^g)^0 = 1.
+    """
+    bits: int
+    k_inputs: int
+
+    def apply(self, carry: Carry, key) -> Carry:
+        sym = pam4_encode(carry.data, self.bits)
+        vals = group_symbols(sym, self.bits, self.k_inputs)
+        vals = vals.astype(jnp.float32)
+        if carry.frac is not None:
+            vals = vals.at[..., -1].add(carry.frac)
+        return Carry(vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class Preprocess:
+    """Unit P, distributed: exact integer psum over the level's axes / N.
+
+    Each peer groups its own symbols locally (``Encode``); the fabric's
+    average is an exact integer psum / N — bit-identical to gathering all
+    N symbol streams and taking ``encoding.preprocess``'s mean, without
+    the N x memory blowup.
+    """
+    axes: tuple
+
+    def apply(self, carry: Carry, key) -> Carry:
+        total = carry.data
+        n = 1
+        for ax in self.axes:
+            total = lax.psum(total, ax)
+            n *= lax.axis_size(ax)
+        return Carry(total / n)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshApply:
+    """The in-network ONN: dense forward pass ('onn') or the MZI mesh
+    emulator ('mesh', xla scan or fused pallas kernel), with the
+    PhaseNoise model injected into ``MZIMesh.apply``."""
+    module: object                  # ONNModule
+    fidelity: str = "onn"
+    mesh_backend: str | None = None
+    noise: PhaseNoise | None = None
+
+    def apply(self, carry: Carry, key) -> Carry:
+        if self.fidelity == "mesh":
+            y = self.module.apply_mesh(carry.data, backend=self.mesh_backend,
+                                       noise=self.noise, key=key)
+        else:
+            y = self.module.apply(carry.data)
+        return Carry(y)
+
+
+@dataclasses.dataclass(frozen=True)
+class Readout:
+    """Transceiver decision stage (paper's ADC): analog symbols -> PAM4.
+
+    With ``emit_carry`` (a cascade level that is not the last), the
+    eq.-10 decimal part leaves as ``frac``: the difference between the
+    ANALOG value the ONN computed (``symbol_value``, what the extra
+    higher-resolution output symbol would carry) and the decoded integer
+    decision.  decoded + frac == the analog value, so nothing is lost
+    between levels; noise/ONN error in the analog value propagates.
+    """
+    transceiver: object             # onn.Transceiver
+    emit_carry: bool = False
+
+    def apply(self, carry: Carry, key) -> Carry:
+        sym = self.transceiver.readout(carry.data)
+        frac = None
+        if self.emit_carry:
+            frac = (symbol_value(carry.data)
+                    - pam4_decode(sym).astype(jnp.float32))
+        return Carry(sym, frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decode:
+    """PAM4 symbols -> offset-binary integer codes; an outgoing carry
+    stays attached for the next level's Encode."""
+
+    def apply(self, carry: Carry, key) -> Carry:
+        return Carry(pam4_decode(carry.data), carry.frac)
+
+
+# ------------------------------------------------------------- pipeline
+
+@dataclasses.dataclass(frozen=True)
+class SyncPipeline:
+    """An ordered stage tuple for ONE reduction level of the fabric."""
+    stages: tuple
+
+    def run(self, data: jnp.ndarray, key=None,
+            frac: jnp.ndarray | None = None) -> Carry:
+        """Thread ``Carry(data, frac)`` through the stages.  Each stage
+        receives its own key (folded off ``key`` by stage index), so
+        stage-level randomness (PhaseNoise) is reproducible per level."""
+        carry = Carry(data, frac)
+        for i, stage in enumerate(self.stages):
+            k = None if key is None else jax.random.fold_in(key, i)
+            carry = stage.apply(carry, k)
+        return carry
+
+
+def level_pipeline(module, bits: int, axes: tuple, fidelity: str = "onn",
+                   mesh_backend: str | None = None,
+                   noise: PhaseNoise | None = None,
+                   emit_carry: bool = False) -> SyncPipeline:
+    """The canonical Encode -> Preprocess -> MeshApply -> Readout -> Decode
+    pipeline for one reduction level over ``axes``."""
+    return SyncPipeline(stages=(
+        Encode(bits=bits, k_inputs=module.cfg.k_inputs),
+        Preprocess(axes=tuple(axes)),
+        MeshApply(module=module, fidelity=fidelity,
+                  mesh_backend=mesh_backend, noise=noise),
+        Readout(transceiver=module.transceiver, emit_carry=emit_carry),
+        Decode(),
+    ))

@@ -194,11 +194,14 @@ def test_fidelity_mesh_reproduces_behavioral_multidevice():
         assert diffs == [0.0, 0.0], (key, results)
 
 
-def test_cascade_backend_rejects_photonic_fidelity():
+def test_cascade_backend_still_validates_axes():
+    """Photonic fidelities are legal for cascade now (the pipeline runs
+    both levels through the emulator — tests/test_pipeline.py), but a
+    cascade without its two-level axis split stays rejected."""
     from repro.collectives import get_backend, SyncConfig
-    cfg = SyncConfig(mode="cascade", axes=("pod", "data"),
+    cfg = SyncConfig(mode="cascade", axes=("data",),
                      photonics=PhotonicsConfig(fidelity="mesh"))
-    with pytest.raises(ValueError, match="behavioral-only"):
+    with pytest.raises(ValueError, match=">= 2 mesh axes"):
         get_backend("cascade").sync(jnp.zeros((8,)), cfg, None)
 
 
@@ -247,19 +250,46 @@ def test_no_import_cycle_onn_first():
     assert "import" not in src
 
 
+def test_no_import_cycle_cascade_first():
+    """repro.photonics.cascade imports clean in a fresh interpreter, and
+    the repro.core.cascade shim re-exports it WITHOUT tripping
+    DeprecationWarning-as-error (the PR-5 migration satellite)."""
+    from conftest import subprocess_env
+    code = ("import repro.photonics.cascade as c; "
+            "print(c.extra_symbols(16))")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip() == "2"
+    code = ("import warnings; "
+            "warnings.simplefilter('error', DeprecationWarning); "
+            "from repro.core.cascade import carry_cascade; "
+            "import numpy as np; "
+            "print(int(carry_cascade(np.ones((2, 2, 3), np.int64))[0]))")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip() == "1"
+
+
 def test_core_shims_alias_photonics():
     """core/ re-export shims expose the same objects, not copies."""
     from repro.core import approx as c_approx
+    from repro.core import cascade as c_cascade
     from repro.core import encoding as c_enc
     from repro.core import mzi as c_mzi
     from repro.core import onn as c_onn
     from repro.core import training as c_training
     from repro.photonics import approx as p_approx, training as p_training
+    from repro.photonics import cascade as p_cascade
     assert c_onn.ONNConfig is ONNConfig
     assert c_enc.pam4_encode is encoding.pam4_encode
     assert c_mzi.givens_decompose is mzi.givens_decompose
     assert c_approx.approx_matrix is p_approx.approx_matrix
     assert c_training.train is p_training.train
+    assert c_cascade.carry_cascade is p_cascade.carry_cascade
+    assert c_cascade.CascadeConfig is p_cascade.CascadeConfig
+    assert c_cascade.extra_symbols is p_cascade.extra_symbols
 
 
 # ----------------------- spec threading of the fidelity knob ----------------
@@ -270,7 +300,7 @@ def test_runspec_fidelity_flag_and_roundtrip():
                               "--fidelity", "mesh"])
     assert spec.sync.photonics.fidelity == "mesh"
     assert RunSpec.from_json(spec.to_json()) == spec
-    with pytest.raises(SpecError, match="optinc-backend knob"):
+    with pytest.raises(SpecError, match="photonic-backend knob"):
         RunSpec.from_args(["--sync", "ring", "--fidelity", "mesh"])
     # a bad fidelity in a --spec file is a SpecError, not a raw ValueError
     with pytest.raises(SpecError, match="invalid PhotonicsConfig"):

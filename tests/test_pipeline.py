@@ -1,0 +1,306 @@
+"""Photonic sync pipeline: stage-composable optinc/cascade levels, the
+eq.-10 carry symbol through Encode/Readout, cascade photonic fidelity
+bit-exactness on a (2,2) pod x data mesh, and the PhaseNoise model
+(thermal drift + shot noise, key-seeded determinism, std=0 exactness)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.photonics import (MZIMesh, ONNModule, PhaseNoise, PhotonicsConfig,
+                             encoding, mesh, mzi, pipeline)
+
+
+# ------------------------- stage-level carry semantics -------------------------
+
+def test_readout_encode_carry_round_trip():
+    """Readout(emit_carry) reads the eq.-10 decimal part off the ANALOG
+    symbols; decoded + frac reproduces the analog value exactly, and the
+    next level's Encode merges frac into the least-significant group."""
+    module = ONNModule.exact_identity(bits=2, n_servers=2)
+    ro = pipeline.Readout(transceiver=module.transceiver, emit_carry=True)
+    analog = jnp.asarray(np.float32([[0.0], [0.5], [1.5], [2.0], [1.25]]))
+    out = ro.apply(pipeline.Carry(analog), None)
+    decoded = encoding.pam4_decode(out.data).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(decoded + out.frac),
+                                  np.asarray(analog[..., 0]))
+    # Encode consumes the carry: grouped value == integer code + frac
+    enc = pipeline.Encode(bits=2, k_inputs=1)
+    dec = pipeline.Decode().apply(out, None)
+    merged = enc.apply(dec, None)
+    np.testing.assert_array_equal(np.asarray(merged.data[..., 0]),
+                                  np.asarray(analog[..., 0]))
+
+
+def test_level_pipeline_single_device_is_oracle():
+    """One pipeline level with no sync axes == the ONN transfer function:
+    Q(identity mean) of the codes, for both fidelities."""
+    module = ONNModule.exact_identity(bits=2, n_servers=1)
+    u = jnp.asarray(np.arange(3, dtype=np.int32))
+    for fid in ("onn", "mesh"):
+        pipe = pipeline.level_pipeline(module, 2, (), fidelity=fid)
+        out = jax.jit(lambda x: pipe.run(x).data)(u)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+
+
+# ------------------- cascade photonic fidelity, (2,2) mesh -------------------
+
+CASCADE_FIDELITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.collectives import SyncConfig, sync_gradients
+    from repro.photonics import PhotonicsConfig
+    from repro.photonics.cascade import carry_cascade, expected
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    M = 2048
+    # RANDOM gradients: PAM4 decision ties (sum(u) % 4 == 2) occur and
+    # must resolve exactly like the behavioral round-half-even — the
+    # wire-exact identity ONN guarantees it (module.exact_identity)
+    g = rng.normal(size=(4, M)).astype(np.float32)
+    g[:, :256] = 0.0          # zero-block guard on-mesh
+
+    def run(fidelity, mesh_backend="xla"):
+        ph = PhotonicsConfig(fidelity=fidelity, mesh_backend=mesh_backend)
+        sync = SyncConfig(mode="cascade", axes=("pod", "data"), bits=2,
+                          block=256, error_feedback=True, photonics=ph)
+        def f(x):
+            out, res = sync_gradients([x], sync, None,
+                                      jnp.zeros((x.size,), jnp.float32))
+            return out, res
+        fn = jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=P(("pod", "data")),
+            out_specs=(P(("pod", "data")), P(("pod", "data"))),
+            check_vma=False))
+        out, res = fn(jnp.asarray(g.reshape(-1)))
+        return np.asarray(out[0]), np.asarray(res)
+
+    beh, beh_res = run("behavioral")
+    results = {}
+    for fid, backend in (("onn", "xla"), ("mesh", "xla"),
+                         ("mesh", "pallas")):
+        out, res = run(fid, backend)
+        results[f"{fid}.{backend}"] = [float(np.abs(out - beh).max()),
+                                       float(np.abs(res - beh_res).max())]
+
+    # and the behavioral cascade itself still equals eq. 10 == eq. 8
+    from repro.photonics.encoding import QuantSpec, quantize
+    spec = QuantSpec(bits=2, block=256)
+    scale = np.abs(g.reshape(4, -1, 256)).max(axis=(0, 2))
+    us = [np.asarray(quantize(jnp.asarray(g[i]), spec,
+                              scale=jnp.asarray(np.maximum(scale, 1e-38)))[0])
+          for i in range(4)]
+    u = np.stack(us).reshape(2, 2, M)
+    results["eq10_eq8"] = int((carry_cascade(u) != expected(u)).sum())
+    print(json.dumps(results))
+""")
+
+
+def test_cascade_photonic_bitexact_2x2():
+    """Acceptance bar: --sync cascade at fidelity onn/mesh (xla AND the
+    fused pallas kernel) is bit-exact against the behavioral carry-cascade
+    on a (2,2) pod x data mesh with RANDOM gradients — decision ties
+    included — plus identical error-feedback residuals."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", CASCADE_FIDELITY_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    results = json.loads(r.stdout.strip().splitlines()[-1])
+    assert results.pop("eq10_eq8") == 0
+    for key, diffs in results.items():
+        assert diffs == [0.0, 0.0], (key, results)
+
+
+CASCADE_TRAIN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json, io, contextlib
+    import repro.launch.train as T
+
+    def run(fidelity):
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            T.main(["--arch", "minitron_4b", "--smoke-config",
+                    "--sync", "cascade", "--mesh", "2x1", "--steps", "3",
+                    "--global-batch", "4", "--seq-len", "32",
+                    "--lr", "1e-3", "--bits", "2", "--fidelity", fidelity])
+        return [json.loads(l)["loss"] for l in buf.getvalue().splitlines()
+                if l.startswith("{")]
+
+    print(json.dumps({"behavioral": run("behavioral"),
+                      "mesh": run("mesh")}))
+""")
+
+
+@pytest.mark.slow
+def test_cascade_train_mesh_fidelity_losses_identical():
+    """Tier-1 acceptance gate: ``train.py --sync cascade --fidelity mesh``
+    on a (2,2) pod x data mesh trains to losses IDENTICAL to
+    ``--fidelity behavioral`` (100%-accuracy built-in ONN at bits=2,
+    zero noise) — both cascade levels run the MZI mesh emulator inside
+    every jitted step."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", CASCADE_TRAIN_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=subprocess_env())
+    assert r.returncode == 0, r.stderr[-2000:]
+    losses = json.loads(r.stdout.strip().splitlines()[-1])
+    assert len(losses["behavioral"]) == 3
+    assert losses["mesh"] == losses["behavioral"], losses
+
+
+# ------------------------------ PhaseNoise model ------------------------------
+
+def _compiled_mesh(m=16, seed=3):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    return (mesh.MZIMesh.compile(mzi.givens_decompose(q)),
+            jnp.asarray(rng.normal(size=(4, m)).astype(np.float32)))
+
+
+def test_phase_noise_std0_bitexact_both_executors():
+    """std=0 disables each noise term STATICALLY: apply with a zero
+    PhaseNoise + key is bit-identical to the noise-free path on the xla
+    scan AND the pallas kernel (the PR-4 parity rows stay untouched)."""
+    emu, x = _compiled_mesh()
+    zero = PhaseNoise(0.0, 0.0)
+    key = jax.random.PRNGKey(0)
+    assert not zero.enabled
+    assert PhaseNoise.from_config(PhotonicsConfig(fidelity="mesh")) is None
+    for backend in ("xla", "pallas"):
+        plain = emu.apply(x, backend=backend)
+        gated = emu.apply(x, backend=backend, noise=zero, key=key)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(gated))
+
+
+def test_phase_noise_is_coherent_and_key_deterministic():
+    """Theta drift perturbs each MZI's two wires coherently (layers stay
+    rotations, the perturbed matrix stays orthogonal), is reproducible
+    under one key, and differs across keys; shot noise perturbs outputs."""
+    emu, x = _compiled_mesh()
+    noise = PhaseNoise(theta_drift_std=0.05, shot_noise_std=0.0)
+    key = jax.random.PRNGKey(42)
+    perm = jnp.asarray(emu.perm)
+    ca1, sa1 = noise.perturb(key, perm, jnp.asarray(emu.ca),
+                             jnp.asarray(emu.sa))
+    ca2, _ = noise.perturb(key, perm, jnp.asarray(emu.ca),
+                           jnp.asarray(emu.sa))
+    np.testing.assert_array_equal(np.asarray(ca1), np.asarray(ca2))
+    # each layer row still satisfies ca^2 + sa^2 == 1 (pure rotations)
+    r = np.asarray(ca1) ** 2 + np.asarray(sa1) ** 2
+    np.testing.assert_allclose(r, 1.0, atol=1e-6)
+
+    y0 = emu.apply(x)
+    yn = emu.apply(x, noise=noise, key=key)
+    assert float(jnp.abs(yn - y0).max()) > 0.0
+    np.testing.assert_array_equal(
+        np.asarray(yn), np.asarray(emu.apply(x, noise=noise, key=key)))
+    assert not np.array_equal(
+        np.asarray(yn),
+        np.asarray(emu.apply(x, noise=noise, key=jax.random.PRNGKey(43))))
+    # drifted mesh is still orthogonal: drift models phase error, not loss
+    mat = np.asarray(emu.apply(jnp.eye(emu.dim), noise=noise, key=key)).T
+    np.testing.assert_allclose(mat @ mat.T, np.eye(emu.dim), atol=1e-5)
+
+    shot = PhaseNoise(0.0, 0.01)
+    ys = emu.apply(x, noise=shot, key=key)
+    assert float(jnp.abs(ys - y0).max()) > 0.0
+
+
+NOISE_PROCESS_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.api import RunSpec
+    from repro.photonics import PhaseNoise, get_module
+
+    spec = RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                              "--fidelity", "mesh",
+                              "--theta-drift-std", "0.05",
+                              "--shot-noise-std", "0.01", "--seed", "7"])
+    ph = spec.sync.photonics
+    module = get_module(ph, spec.sync.bits, 4)
+    noise = PhaseNoise.from_config(ph)
+    key = jax.random.fold_in(jax.random.PRNGKey(spec.seed + 1), 5)  # step 5
+    prog = module.programs[0].u
+    ca, sa = noise.perturb(key, jnp.asarray(prog.perm),
+                           jnp.asarray(prog.ca), jnp.asarray(prog.sa))
+    out = module.apply_mesh(jnp.asarray(np.float32([[0.5], [1.25]])),
+                            noise=noise, key=key)
+    print(json.dumps({"ca": np.asarray(ca).tolist(),
+                      "sa": np.asarray(sa).tolist(),
+                      "out": np.asarray(out).tolist()}))
+""")
+
+
+@pytest.mark.slow
+def test_phase_noise_identical_across_processes():
+    """Same RunSpec + same step key => identical perturbed thetas (and
+    mesh outputs) in two separate processes — noise draws come from the
+    per-step key only, never from process-local state."""
+    from conftest import subprocess_env
+
+    def once():
+        r = subprocess.run([sys.executable, "-c", NOISE_PROCESS_SCRIPT],
+                           capture_output=True, text=True, timeout=600,
+                           env=subprocess_env())
+        assert r.returncode == 0, r.stderr[-2000:]
+        return json.loads(r.stdout.strip().splitlines()[-1])
+
+    a, b = once(), once()
+    assert a == b
+
+
+def test_noise_requires_step_key():
+    """A noisy PhotonicsConfig without a per-step sync key would silently
+    train noise-free; the backend rejects it at trace time."""
+    from repro.collectives import SyncConfig, get_backend
+    ph = PhotonicsConfig(fidelity="mesh", theta_drift_std=0.1)
+    cfg = SyncConfig(mode="optinc", axes=(), bits=2, photonics=ph)
+    with pytest.raises(ValueError, match="per-step sync key"):
+        get_backend("optinc").sync(jnp.zeros((8,)), cfg, None)
+
+
+# ----------------------- spec threading of the new knobs -----------------------
+
+def test_runspec_noise_and_cascade_fidelity_flags():
+    from repro.api import RunSpec, SpecError
+    spec = RunSpec.from_args(["--sync", "cascade", "--bits", "2",
+                              "--fidelity", "mesh",
+                              "--theta-drift-std", "0.02",
+                              "--shot-noise-std", "0.01"])
+    assert spec.sync.photonics.fidelity == "mesh"
+    assert spec.sync.photonics.theta_drift_std == 0.02
+    assert spec.sync.photonics.shot_noise_std == 0.01
+    assert spec.mesh.pods == 2            # cascade auto-provisions pods
+    assert RunSpec.from_json(spec.to_json()) == spec
+    # cascade now accepts the photonic fidelities; ring/psum still do not
+    with pytest.raises(SpecError, match="photonic-backend knob"):
+        RunSpec.from_args(["--sync", "ring", "--fidelity", "mesh"])
+    # noise models the emulated mesh only
+    with pytest.raises(SpecError, match="fidelity mesh"):
+        RunSpec.from_args(["--sync", "optinc", "--fidelity", "onn",
+                           "--theta-drift-std", "0.1"])
+    # the photonic cascade is single-symbol-only until cascade-trained
+    # ONNs exist (the carry must stay on the unit-P grid)
+    with pytest.raises(SpecError, match="bits <= 2"):
+        RunSpec.from_args(["--sync", "cascade", "--bits", "8",
+                           "--fidelity", "mesh"])
+    with pytest.raises(SpecError, match="error-feedback"):
+        RunSpec.from_args(["--sync", "optinc", "--sparse-residuals"])
+    # negative stds are a config error (wrapped as SpecError from JSON)
+    with pytest.raises(SpecError, match="invalid PhotonicsConfig"):
+        RunSpec.from_json_dict(
+            {"sync": {"photonics": {"theta_drift_std": -0.1}}})
