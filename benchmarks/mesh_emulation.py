@@ -19,8 +19,15 @@ enforced when the kernel actually compiles (TPU); off-TPU it runs in
 interpret mode, whose rows are informational (the interpreter evaluates
 the kernel with jax ops and is not a speed claim).
 
+The block-batched rows (``mesh_emulation.blocked.*``) time
+``ApproxLayerProgram``-style stacked programs: the vmapped xla scan
+against ONE ``mesh_scan_blocks`` launch with the block axis folded into
+the kernel grid.  ``--blk-b-sweep`` is the measured ``blk_b`` selection
+mode: it times the kernel at each candidate batch tile and reports the
+fastest (set it via ``--blk-b`` / ``PhotonicsConfig.blk_b``).
+
     PYTHONPATH=src python -m benchmarks.mesh_emulation \
-        [--smoke] [--full] [--parity]
+        [--smoke] [--full] [--parity] [--blk-b-sweep]
 """
 from __future__ import annotations
 
@@ -99,6 +106,79 @@ def bench_orthogonal(m: int, batch: int) -> list:
     return [rec, app], [pl_speed]
 
 
+def _stacked_program(m: int, blocks: int, seed: int = 0):
+    """``blocks`` random m-port programs stacked ApproxLayerProgram-style."""
+    progs, meshes = [], []
+    for i in range(blocks):
+        rng = np.random.default_rng(seed + 7 * i + m)
+        q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+        progs.append(mzi.givens_decompose(q))
+        meshes.append(mesh.MZIMesh.compile(progs[-1]))
+    return mesh._stack_meshes(meshes), progs
+
+
+def bench_blocked(m: int, blocks: int, batch: int, blk_b: int = 0) -> list:
+    """The block-batched path (``ApproxLayerProgram``'s stacked meshes):
+    numpy per-block rebuild+matmul vs the vmapped xla scan vs ONE
+    ``mesh_scan_blocks`` launch with the block axis folded into the
+    kernel grid.  Returns ([xla_speedup], [pallas_speedup])."""
+    st, progs = _stacked_program(m, blocks)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(batch, m)).astype(np.float32)
+    xj = jnp.asarray(x)
+
+    _, np_us = timed(
+        lambda: [x @ mzi.reconstruct(p).T for p in progs], repeats=1)
+    jit_xla = jax.jit(lambda v: mesh._apply_stacked(
+        st, v, x_block_axis=False, backend="xla"))
+    want, xla_us = timed(lambda: _block(jit_xla(xj)))
+    jit_pl = jax.jit(lambda v: mesh._apply_stacked(
+        st, v, x_block_axis=False, backend="pallas", blk_b=blk_b))
+    got, pl_us = timed(lambda: _block(jit_pl(xj)))
+    diff = float(jnp.max(jnp.abs(got - want)))
+    mode = "compiled" if _pallas_enforced() else "interpret"
+    xla_s, pl_s = np_us / xla_us, np_us / pl_us
+    emit(f"mesh_emulation.blocked.m{m}.B{blocks}.b{batch}.xla", xla_us,
+         f"numpy_us={np_us:.0f} jax_us={xla_us:.0f} speedup={xla_s:.1f}")
+    emit(f"mesh_emulation.blocked.m{m}.B{blocks}.b{batch}.pallas", pl_us,
+         f"numpy_us={np_us:.0f} pallas_us={pl_us:.0f} speedup={pl_s:.1f} "
+         f"mode={mode} blk_b={blk_b} max_diff_vs_xla={diff:.2e}")
+    if diff > PARITY_ATOL:
+        raise RuntimeError(
+            f"blocked pallas kernel diverged from the vmapped xla scan at "
+            f"m={m} B={blocks}: {diff:.2e}")
+    return [xla_s], [pl_s]
+
+
+BLK_B_CANDIDATES = (32, 64, 128, 256, 512)
+
+
+def sweep_blk_b(m: int = 128, blocks: int = 4, batch: int = 2048,
+                candidates=BLK_B_CANDIDATES) -> int:
+    """Measured ``blk_b`` selection: time the block-batched kernel at each
+    candidate batch tile on one representative stacked program and report
+    the fastest — the value to pass as ``--blk-b`` /
+    ``PhotonicsConfig.blk_b``.  Off-TPU the kernel runs interpreted, so
+    the numbers rank the tiling for the interpreter only (informational);
+    re-run on TPU to tune the compiled kernel."""
+    st, _ = _stacked_program(m, blocks)
+    rng = np.random.default_rng(2)
+    xj = jnp.asarray(rng.normal(size=(batch, m)).astype(np.float32))
+    mode = "compiled" if _pallas_enforced() else "interpret"
+    best, best_us = 0, float("inf")
+    for blk in candidates:
+        fwd = jax.jit(lambda v, b=blk: mesh._apply_stacked(
+            st, v, x_block_axis=False, backend="pallas", blk_b=b))
+        _, us = timed(lambda: _block(fwd(xj)))
+        emit(f"mesh_emulation.blk_b_sweep.m{m}.B{blocks}.b{batch}.blk{blk}",
+             us, f"blk_b={blk} mode={mode}")
+        if us < best_us:
+            best, best_us = blk, us
+    emit(f"mesh_emulation.blk_b_sweep.best", best_us,
+         f"blk_b={best} m={m} blocks={blocks} batch={batch} mode={mode}")
+    return best
+
+
 def bench_onn_forward(batch: int) -> dict:
     """Full programmed-ONN forward pass: numpy apply_hardware oracle vs
     both compiled emulators (xla scan, fused pallas) on the SAME program
@@ -148,7 +228,15 @@ def check_parity(widths=(2, 5, 16, 64, 128), batch: int = 32) -> float:
 
 
 def main(full: bool = False, smoke: bool = False,
-         parity_only: bool = False) -> None:
+         parity_only: bool = False, blk_b_sweep: bool = False) -> None:
+    if blk_b_sweep:
+        # measured blk_b selection is its own mode and JSON section so
+        # tuning runs don't perturb the tracked perf-trajectory rows
+        try:
+            sweep_blk_b(batch=1024 if smoke else 2048)
+        finally:
+            flush_json("mesh_blk_b_sweep")
+        return
     if parity_only:
         # the standalone parity sweep is its own CI step and JSON section
         # (the bench rows below carry their own in-line parity asserts, so
@@ -165,6 +253,12 @@ def main(full: bool = False, smoke: bool = False,
         xla_speedups, pallas_speedups = [], []
         for m, b in sizes:
             xla_s, pallas_s = bench_orthogonal(m, b)
+            xla_speedups.extend(xla_s)
+            pallas_speedups.extend(pallas_s)
+        blk_sizes = [(64, 4, 512)] if smoke else [(64, 4, 1024),
+                                                  (128, 4, 2048)]
+        for m, nb, b in blk_sizes:
+            xla_s, pallas_s = bench_blocked(m, nb, b)
             xla_speedups.extend(xla_s)
             pallas_speedups.extend(pallas_s)
         fwd = bench_onn_forward(256)
@@ -200,8 +294,12 @@ if __name__ == "__main__":
                     help="add the 192-port mesh")
     ap.add_argument("--parity", action="store_true",
                     help="only the pallas-vs-xla parity gate (fast)")
+    ap.add_argument("--blk-b-sweep", action="store_true",
+                    help="measured blk_b selection: time the block-batched "
+                         "kernel at each candidate batch tile")
     args = ap.parse_args()
     try:
-        main(full=args.full, smoke=args.smoke, parity_only=args.parity)
+        main(full=args.full, smoke=args.smoke, parity_only=args.parity,
+             blk_b_sweep=args.blk_b_sweep)
     except RuntimeError as e:
         raise SystemExit(str(e))

@@ -1,0 +1,110 @@
+"""Perf-trajectory gate: diff fresh benchmark rows against committed baselines.
+
+Compares ``results/bench/<section>.json`` (written by a benchmark run that
+just happened, e.g. the CI benchmarks-smoke job) against the committed
+``results/bench/<section>_baseline.json`` snapshot:
+
+* every baseline row must still exist (a vanished row is a coverage
+  regression, not a perf win);
+* each row's ``us_per_call`` may not exceed baseline * ``--tol`` (the
+  default tolerance is deliberately loose — shared CPU CI runners are
+  noisy; the gate catches order-of-magnitude regressions like losing the
+  kernel fusion or the bucket scan, not 20% jitter).  Rows whose baseline
+  is ~0 us (pure derived/ratio rows) are skipped for the time check;
+* fig7b mesh rows carry ``emulator_overhead_ratio=`` in their derived
+  field — the mesh-vs-behavioral step-time ratio.  Fresh ratios must stay
+  under ``--ratio-cap`` (the tentpole's <= ~2x bar, with tolerance
+  headroom) for the noise-free mesh rows.
+
+  PYTHONPATH=src python scripts/check_perf_regression.py \
+      [--sections mesh_emulation,fig7b] [--tol 4.0] [--ratio-cap 2.0]
+
+Refresh a baseline by re-running the benchmark on a quiet machine and
+copying ``results/bench/<section>.json`` over the ``_baseline`` file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = _ROOT / "results" / "bench"
+
+# fig7b rows the --ratio-cap binds: the noise-free mesh row of llama8L
+# in the paper's H100 setting — the smoke arch the <= ~2x bar is stated
+# against (measured 1.38x).  The v5e re-parameterization and resnet50
+# divide the same measured emulator cost by a much smaller modeled
+# compute term, so their ratios are compute-shape artifacts and stay
+# informational.
+RATIO_GATED = re.compile(r"^fig7b\.H100\.llama8L\.mesh$")
+
+
+def load_rows(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        return {row["name"]: row for row in json.load(f)}
+
+
+def derived_field(row: dict, key: str) -> float | None:
+    m = re.search(rf"{key}=([-0-9.e+]+)", row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def check_section(section: str, tol: float, ratio_cap: float) -> list:
+    fresh_p = BENCH / f"{section}.json"
+    base_p = BENCH / f"{section}_baseline.json"
+    if not base_p.exists():
+        return [f"{section}: missing baseline {base_p} (run the benchmark "
+                f"and copy {section}.json to {section}_baseline.json)"]
+    if not fresh_p.exists():
+        return [f"{section}: no fresh {fresh_p} — run the benchmark before "
+                f"the gate"]
+    fresh, base = load_rows(fresh_p), load_rows(base_p)
+    errors = []
+    for name, brow in base.items():
+        frow = fresh.get(name)
+        if frow is None:
+            errors.append(f"{section}: baseline row {name!r} vanished")
+            continue
+        b_us, f_us = brow["us_per_call"], frow["us_per_call"]
+        if b_us > 1.0 and f_us > b_us * tol:
+            errors.append(
+                f"{section}: {name} regressed {f_us:.0f}us vs baseline "
+                f"{b_us:.0f}us (tol {tol:g}x)")
+    for name, frow in fresh.items():
+        if RATIO_GATED.match(name):
+            ratio = derived_field(frow, "emulator_overhead_ratio")
+            if ratio is not None and ratio > ratio_cap:
+                errors.append(
+                    f"{section}: {name} emulator_overhead_ratio={ratio:.2f} "
+                    f"exceeds the {ratio_cap:g}x mesh-vs-behavioral cap")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--sections", default="mesh_emulation,fig7b",
+                    help="comma-separated baseline sections to gate")
+    ap.add_argument("--tol", type=float, default=4.0,
+                    help="allowed fresh/baseline us_per_call ratio "
+                         "(loose: CI runners are noisy)")
+    ap.add_argument("--ratio-cap", type=float, default=2.0,
+                    help="max fig7b mesh emulator_overhead_ratio")
+    args = ap.parse_args()
+    errors = []
+    for section in args.sections.split(","):
+        errors += check_section(section.strip(), args.tol, args.ratio_cap)
+    for e in errors:
+        print(f"PERF REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print(f"perf gate OK: {args.sections} within {args.tol:g}x of "
+              f"baseline, mesh overhead ratio <= {args.ratio_cap:g}x")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -193,6 +193,11 @@ class RunSpec:
                 f"ONN's grid for bits <= 2; got --bits {self.sync.bits} "
                 f"with --sync cascade --fidelity {ph.fidelity} (use "
                 f"--fidelity behavioral for wider widths)")
+        if ph.blk_b != 0 and ph.fidelity != "mesh":
+            raise SpecError(
+                f"--blk-b tiles the Pallas MZI-emulator kernel's batch and "
+                f"only applies to --fidelity mesh; got --fidelity "
+                f"{ph.fidelity}")
         if ((ph.theta_drift_std > 0 or ph.shot_noise_std > 0)
                 and ph.fidelity != "mesh"):
             raise SpecError(
@@ -278,6 +283,11 @@ class RunSpec:
         ap.add_argument("--mesh-backend", choices=MESH_BACKENDS,
                         help="fidelity=mesh executor: per-layer XLA scan | "
                              "fused Pallas VMEM kernel (kernels.mesh_scan)")
+        ap.add_argument("--blk-b", type=int,
+                        help="Pallas mesh-kernel batch tile (rows per VMEM "
+                             "tile, multiple of 8; 0 = default 128 — sweep "
+                             "with benchmarks/mesh_emulation.py "
+                             "--blk-b-sweep)")
         ap.add_argument("--theta-drift-std", type=float,
                         help="PhaseNoise: thermal drift std (rad) on every "
                              "programmed MZI phase (fidelity=mesh)")
@@ -346,6 +356,8 @@ class RunSpec:
             ph_kw["fidelity"] = ns.pop("fidelity")
         if "mesh_backend" in ns:
             ph_kw["mesh_backend"] = ns.pop("mesh_backend")
+        if "blk_b" in ns:
+            ph_kw["blk_b"] = ns.pop("blk_b")
         if "theta_drift_std" in ns:
             ph_kw["theta_drift_std"] = ns.pop("theta_drift_std")
         if "shot_noise_std" in ns:

@@ -202,7 +202,7 @@ def _photonic_sync(flat, cfg, key):
     noise = ph_pipeline.PhaseNoise.from_config(ph)
     pipe = ph_pipeline.level_pipeline(
         module, cfg.bits, cfg.axes, fidelity=ph.fidelity,
-        mesh_backend=ph.mesh_backend, noise=noise)
+        mesh_backend=ph.mesh_backend, noise=noise, blk_b=ph.blk_b)
     u_avg = pipe.run(u.reshape(-1), key=_noise_key(cfg, key, noise)).data
     return _finish_photonic(u_avg, u, q, safe, spec, flat, cfg, key)
 
@@ -249,10 +249,11 @@ def _photonic_cascade_sync(flat, cfg, key):
         nk0, nk1 = jax.random.split(nk)
     p0 = ph_pipeline.level_pipeline(
         mod0, cfg.bits, (lvl1_ax,), fidelity=ph.fidelity,
-        mesh_backend=ph.mesh_backend, noise=noise, emit_carry=True)
+        mesh_backend=ph.mesh_backend, noise=noise, emit_carry=True,
+        blk_b=ph.blk_b)
     p1 = ph_pipeline.level_pipeline(
         mod1, cfg.bits, lvl2_axes, fidelity=ph.fidelity,
-        mesh_backend=ph.mesh_backend, noise=noise)
+        mesh_backend=ph.mesh_backend, noise=noise, blk_b=ph.blk_b)
     lvl0 = p0.run(u.reshape(-1), key=nk0)
     u_avg = p1.run(lvl0.data, key=nk1, frac=lvl0.frac).data
     return _finish_photonic(u_avg, u, q, safe, spec, flat, cfg, key)

@@ -125,7 +125,29 @@ def sync_gradients(grads, cfg: SyncConfig, key: jax.Array | None = None,
     buckets = [flat[s:e] for s, e in layout.bounds]
     keys = (jax.random.split(key, len(buckets)) if key is not None
             else [None] * len(buckets))
+    # All buckets except a ragged tail share one shape, so their sync is
+    # ONE lax.scan over the stacked bucket axis: the backend body (for
+    # the photonic fidelities, the whole emulated pipeline) is traced and
+    # compiled ONCE instead of once per bucket — a 43M-param model at
+    # 4 MiB buckets is 41 buckets, and the Python-unrolled form made the
+    # mesh fidelity's XLA compile, not its runtime, the step bottleneck.
+    # Per-bucket math and keys are identical, so the scan is bit-exact
+    # against the unrolled loop (regression-tested).
+    n_full = sum(1 for s, e in layout.bounds
+                 if e - s == layout.bucket_elems)
     outs, errs = [], []
+    if n_full >= 2:
+        xs = jnp.stack(buckets[:n_full])
+        if key is not None:
+            _, (out_s, err_s) = jax.lax.scan(
+                lambda c, bk: (c, backend.sync(bk[0], cfg, bk[1])),
+                None, (xs, keys[:n_full]))
+        else:
+            _, (out_s, err_s) = jax.lax.scan(
+                lambda c, b: (c, backend.sync(b, cfg, None)), None, xs)
+        outs = list(out_s)
+        errs = list(err_s) if err_s is not None else [None] * n_full
+        buckets, keys = buckets[n_full:], keys[n_full:]
     for b, k in zip(buckets, keys):
         out, err = backend.sync(b, cfg, k)
         outs.append(out)

@@ -76,6 +76,9 @@ class PhotonicsConfig:
     train_epochs: int = 0          # 'train' source budget (0 = refuse)
     seed: int = 0
     mesh_backend: str = "xla"      # fidelity='mesh' executor: xla | pallas
+    blk_b: int = 0                 # pallas batch tile (rows/VMEM tile);
+    #                                0 = kernel default (128).  Tune with
+    #                                benchmarks/mesh_emulation.py --blk-b-sweep
     theta_drift_std: float = 0.0   # thermal drift on programmed phases (rad)
     shot_noise_std: float = 0.0    # additive noise on analog outputs
 
@@ -89,6 +92,10 @@ class PhotonicsConfig:
         if self.mesh_backend not in MESH_BACKENDS:
             raise ValueError(f"mesh_backend must be one of {MESH_BACKENDS}, "
                              f"got {self.mesh_backend!r}")
+        if self.blk_b < 0 or self.blk_b % 8:
+            raise ValueError(
+                f"blk_b must be a multiple of the 8-row sublane tile "
+                f"(0 = auto), got {self.blk_b!r}")
         if self.theta_drift_std < 0.0 or self.shot_noise_std < 0.0:
             raise ValueError(
                 f"noise stds must be >= 0, got theta_drift_std="

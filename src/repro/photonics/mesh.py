@@ -138,34 +138,57 @@ class MZIMesh:
     def apply(self, x: jnp.ndarray, transpose: bool = False,
               backend: str | None = None,
               post_scale: jnp.ndarray | None = None,
-              noise=None, key=None) -> jnp.ndarray:
+              noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
         """o @ x (or o^T @ x when ``transpose``) over the last axis.
 
         ``backend`` selects the executor (``PhotonicsConfig.mesh_backend``):
         'xla' (default) runs one gather+FMA per layer under ``lax.scan``;
         'pallas' runs the fused VMEM-resident kernel
-        (``kernels.mesh_scan``).  ``post_scale`` is an optional diagonal
-        epilogue multiplied into the output — on the pallas path it is
-        fused into the kernel's final VPU pass.
+        (``kernels.mesh_scan``), tiled by ``blk_b`` batch rows
+        (``PhotonicsConfig.blk_b``, 0 = default).  ``post_scale`` is an
+        optional diagonal epilogue multiplied into the output — on the
+        pallas path it is fused into the kernel's final VPU pass.
 
         ``noise`` (a ``pipeline.PhaseNoise``) + ``key`` inject the
-        thermal/shot noise model: the theta drift perturbs the (ca, sa)
-        coefficient stacks BEFORE dispatching to either executor (so xla
-        and pallas run the same perturbed program), and the shot noise
-        lands on the analog output.  Both are no-ops (statically — the
-        traced jaxpr is unchanged) when the stds are 0 or no key is
-        given.
+        thermal/shot noise model: on the xla executor the theta drift
+        perturbs the (ca, sa) coefficient stacks before the scan; the
+        pallas executor draws the SAME drift model in-kernel (seeded per
+        apply off the key — no perturbed stacks are materialized in
+        XLA); shot noise lands on the analog output of either.  Both are
+        no-ops (statically — the traced jaxpr is unchanged) when the
+        stds are 0 or no key is given.
+
+        A program with ZERO rotations (``n_rot == 0``, every layer an
+        identity) skips both executors: the scan would compute
+        ``1*y + 0*y[perm]`` per layer, bit-exactly ``y`` — and the theta
+        drift on an identity layer is exactly eps = 0 (sign(wire - perm)
+        vanishes), so the elision is bit-exact on every path.  This makes
+        the exact-identity ONN (bits <= 2) mesh fidelity as cheap as the
+        behavioral transfer function.
         """
         perm, ca, sa = self.perm, self.ca, self.sa
-        k_shot = None
+        k_theta = k_shot = None
         if noise is not None and noise.enabled and key is not None:
             k_theta, k_shot = jax.random.split(key)
-            ca, sa = noise.perturb(k_theta, perm, ca, sa)
-        if _check_backend(backend) == "pallas":
-            from ..kernels.mesh_scan import mesh_scan
-            y = mesh_scan(self.signs, perm, ca, sa, x,
-                          transpose=transpose, post_scale=post_scale)
+        backend = _check_backend(backend)
+        if self.n_rot == 0:
+            dt = jnp.result_type(x.dtype, self.ca.dtype)
+            y = x.astype(dt) * self.signs.astype(dt)
+            if post_scale is not None:
+                y = y * post_scale.astype(dt)
             return y if k_shot is None else noise.shot(k_shot, y)
+        if backend == "pallas":
+            from ..kernels.mesh_scan import mesh_scan
+            theta_std, seed = 0.0, None
+            if k_theta is not None and noise.theta_drift_std > 0.0:
+                theta_std = noise.theta_drift_std
+                seed = jax.random.bits(k_theta, (), jnp.uint32)
+            y = mesh_scan(self.signs, perm, ca, sa, x,
+                          transpose=transpose, post_scale=post_scale,
+                          blk_b=blk_b, theta_std=theta_std, seed=seed)
+            return y if k_shot is None else noise.shot(k_shot, y)
+        if k_theta is not None:
+            ca, sa = noise.perturb(k_theta, perm, ca, sa)
         dt = jnp.result_type(x.dtype, self.ca.dtype)
         y = x.astype(dt)
         if not transpose:
@@ -227,19 +250,50 @@ def _stack_meshes(meshes):
 def _apply_stacked(stacked: MZIMesh, x: jnp.ndarray, x_block_axis: bool,
                    backend: str | None = None,
                    post_scale: jnp.ndarray | None = None,
-                   noise=None, key=None):
-    """vmap a stacked mesh over its block axis.  ``x`` is shared across
+                   noise=None, key=None, blk_b: int = 0):
+    """Apply a stacked mesh over its block axis.  ``x`` is shared across
     blocks (tall layers) or carries its own block axis at -2 (wide
     layers).  ``post_scale`` (B, dim) is each block's diagonal epilogue
-    (fused in-kernel on the pallas backend).  With a PhaseNoise model the
-    key is split so every block draws independent noise.
-    Returns (..., B, dim)."""
+    (fused in-kernel on the pallas backend).  Returns (..., B, dim).
+
+    The pallas backend runs ONE ``mesh_scan_blocks`` launch with the
+    block axis folded into the kernel grid (theta drift drawn in-kernel
+    from per-block seeds); the xla backend vmaps the per-block scan,
+    splitting the key so every block draws independent noise.  A stack
+    with zero rotations total (every block's every layer an identity)
+    skips both executors bit-exactly — see ``MZIMesh.apply``.
+    """
+    n_blocks = stacked.signs.shape[0]
+    k_theta = k_shot = None
+    if noise is not None and noise.enabled and key is not None:
+        k_theta, k_shot = jax.random.split(key)
+    if stacked.n_rot == 0:
+        _check_backend(backend)
+        dt = jnp.result_type(x.dtype, stacked.ca.dtype)
+        y = x.astype(dt)
+        if not x_block_axis:
+            y = y[..., None, :]
+        y = y * stacked.signs.astype(dt)
+        if post_scale is not None:
+            y = y * post_scale.astype(dt)
+        return y if k_shot is None else noise.shot(k_shot, y)
+    if _check_backend(backend) == "pallas":
+        from ..kernels.mesh_scan import mesh_scan_blocks
+        theta_std, seeds = 0.0, None
+        if k_theta is not None and noise.theta_drift_std > 0.0:
+            theta_std = noise.theta_drift_std
+            seeds = jax.random.bits(k_theta, (n_blocks,), jnp.uint32)
+        y = mesh_scan_blocks(stacked.signs, stacked.perm, stacked.ca,
+                             stacked.sa, x, x_block_axis=x_block_axis,
+                             post_scale=post_scale, blk_b=blk_b,
+                             theta_std=theta_std, seeds=seeds)
+        return y if k_shot is None else noise.shot(k_shot, y)
     keys = None
     if noise is not None and noise.enabled and key is not None:
-        keys = jax.random.split(key, stacked.signs.shape[0])
+        keys = jax.random.split(key, n_blocks)
 
     def one(signs, perm, ca, sa, xb, ps, k):
-        return MZIMesh(stacked.dim, 0, signs, perm, ca, sa).apply(
+        return MZIMesh(stacked.dim, 1, signs, perm, ca, sa).apply(
             xb, backend=backend, post_scale=ps, noise=noise, key=k)
 
     out = jax.vmap(one,
@@ -276,19 +330,20 @@ class SVDLayerProgram:
                 + int(self.sigma.shape[0]))
 
     def apply(self, x: jnp.ndarray, backend: str | None = None,
-              noise=None, key=None) -> jnp.ndarray:
+              noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
         kv = ku = None
         if key is not None:
             kv, ku = jax.random.split(key)
         m, _ = self.shape
         k = self.sigma.shape[0]
         z = self.v.apply(x, transpose=True, backend=backend,
-                         noise=noise, key=kv)[..., :k]
+                         noise=noise, key=kv, blk_b=blk_b)[..., :k]
         z = z * self.sigma
         if m > k:
             z = jnp.concatenate(
                 [z, jnp.zeros(z.shape[:-1] + (m - k,), z.dtype)], axis=-1)
-        return self.u.apply(z, backend=backend, noise=noise, key=ku) + self.b
+        return self.u.apply(z, backend=backend, noise=noise, key=ku,
+                            blk_b=blk_b) + self.b
 
 
 @jax.tree_util.register_pytree_node_class
@@ -313,7 +368,7 @@ class ApproxLayerProgram:
         return self.meshes.num_rotations + n_blocks * s
 
     def apply(self, x: jnp.ndarray, backend: str | None = None,
-              noise=None, key=None) -> jnp.ndarray:
+              noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
         # the Sigma_a diagonal rides as the meshes' fused epilogue (the
         # pallas kernel applies it in VMEM before the HBM write)
         m, n = self.shape
@@ -321,13 +376,13 @@ class ApproxLayerProgram:
         if m >= n:
             ys = _apply_stacked(self.meshes, x, x_block_axis=False,
                                 backend=backend, post_scale=self.d,
-                                noise=noise, key=key)
+                                noise=noise, key=key, blk_b=blk_b)
             y = ys.reshape(x.shape[:-1] + (m,))
         else:
             xs = x.reshape(x.shape[:-1] + (n // s, s))
             ys = _apply_stacked(self.meshes, xs, x_block_axis=True,
                                 backend=backend, post_scale=self.d,
-                                noise=noise, key=key)
+                                noise=noise, key=key, blk_b=blk_b)
             y = jnp.sum(ys, axis=-2)
         return y + self.b
 
@@ -360,16 +415,17 @@ def compile_hardware(hw, dtype=None):
 
 def apply_hardware(programs, a: jnp.ndarray, cfg,
                    backend: str | None = None,
-                   noise=None, key=None) -> jnp.ndarray:
+                   noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
     """Jittable forward pass through the compiled MZI meshes — the fast
     counterpart of ``onn.apply_hardware`` (the numpy oracle).  ``backend``
-    selects the layer executor (``PhotonicsConfig.mesh_backend``);
-    ``noise`` + ``key`` thread the PhaseNoise model into every layer's
-    meshes (one key per layer, folded off ``key``)."""
+    selects the layer executor (``PhotonicsConfig.mesh_backend``) and
+    ``blk_b`` its batch tile; ``noise`` + ``key`` thread the PhaseNoise
+    model into every layer's meshes (one key per layer, folded off
+    ``key``)."""
     x = a / jnp.asarray(cfg.in_scale, programs[0].b.dtype)
     for li, prog in enumerate(programs):
         k = None if key is None else jax.random.fold_in(key, li)
-        x = prog.apply(x, backend=backend, noise=noise, key=k)
+        x = prog.apply(x, backend=backend, noise=noise, key=k, blk_b=blk_b)
         if li < len(programs) - 1:
             x = jax.nn.relu(x)
     return x * cfg.out_scale

@@ -112,18 +112,21 @@ class ONNModule:
         return self._programs
 
     def apply_mesh(self, a: jnp.ndarray, backend: str | None = None,
-                   noise=None, key=None) -> jnp.ndarray:
+                   noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
         """Forward pass through the phase-programmed mesh emulator.
-        ``backend`` picks the layer executor (xla scan | fused pallas);
-        ``noise`` + ``key`` inject the PhaseNoise model (pipeline.py)."""
+        ``backend`` picks the layer executor (xla scan | fused pallas)
+        and ``blk_b`` the pallas batch tile; ``noise`` + ``key`` inject
+        the PhaseNoise model (pipeline.py)."""
         return mesh_mod.apply_hardware(self.programs, a, self.cfg,
-                                       backend=backend, noise=noise, key=key)
+                                       backend=backend, noise=noise, key=key,
+                                       blk_b=blk_b)
 
     def symbols(self, a: jnp.ndarray, fidelity: str = "onn",
                 mesh_backend: str | None = None,
-                noise=None, key=None) -> jnp.ndarray:
+                noise=None, key=None, blk_b: int = 0) -> jnp.ndarray:
         """Analog forward pass + transceiver readout -> PAM4 symbols."""
-        out = (self.apply_mesh(a, backend=mesh_backend, noise=noise, key=key)
+        out = (self.apply_mesh(a, backend=mesh_backend, noise=noise, key=key,
+                               blk_b=blk_b)
                if fidelity == "mesh" else self.apply(a))
         return self.transceiver.readout(out)
 

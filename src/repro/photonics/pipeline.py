@@ -165,11 +165,13 @@ class MeshApply:
     fidelity: str = "onn"
     mesh_backend: str | None = None
     noise: PhaseNoise | None = None
+    blk_b: int = 0                  # pallas batch tile (0 = default)
 
     def apply(self, carry: Carry, key) -> Carry:
         if self.fidelity == "mesh":
             y = self.module.apply_mesh(carry.data, backend=self.mesh_backend,
-                                       noise=self.noise, key=key)
+                                       noise=self.noise, key=key,
+                                       blk_b=self.blk_b)
         else:
             y = self.module.apply(carry.data)
         return Carry(y)
@@ -229,14 +231,14 @@ class SyncPipeline:
 def level_pipeline(module, bits: int, axes: tuple, fidelity: str = "onn",
                    mesh_backend: str | None = None,
                    noise: PhaseNoise | None = None,
-                   emit_carry: bool = False) -> SyncPipeline:
+                   emit_carry: bool = False, blk_b: int = 0) -> SyncPipeline:
     """The canonical Encode -> Preprocess -> MeshApply -> Readout -> Decode
     pipeline for one reduction level over ``axes``."""
     return SyncPipeline(stages=(
         Encode(bits=bits, k_inputs=module.cfg.k_inputs),
         Preprocess(axes=tuple(axes)),
         MeshApply(module=module, fidelity=fidelity,
-                  mesh_backend=mesh_backend, noise=noise),
+                  mesh_backend=mesh_backend, noise=noise, blk_b=blk_b),
         Readout(transceiver=module.transceiver, emit_carry=emit_carry),
         Decode(),
     ))

@@ -125,11 +125,12 @@ def _build(ph: PhotonicsConfig, bits: int, n_servers: int) -> ONNModule:
 
 def _cache_key(ph: PhotonicsConfig, bits: int, n_servers: int):
     # the resolved module is executor- and noise-independent: mesh_backend
-    # only selects how the compiled programs are APPLIED, and PhaseNoise
-    # perturbs them per-apply at runtime — so runs comparing xla vs pallas
-    # or noise-on vs noise-off in one process must share one
+    # and the kernel tiling knob blk_b only select how the compiled
+    # programs are APPLIED, and PhaseNoise perturbs them per-apply at
+    # runtime — so runs comparing xla vs pallas, blk_b sweeps, or
+    # noise-on vs noise-off in one process must share one
     # build/Givens-programming
-    return (dataclasses.replace(ph, mesh_backend="xla",
+    return (dataclasses.replace(ph, mesh_backend="xla", blk_b=0,
                                 theta_drift_std=0.0, shot_noise_std=0.0),
             bits, n_servers)
 

@@ -74,6 +74,99 @@ def test_unknown_backend_rejected():
         emu.apply(x, backend="bogus")
 
 
+# ----------------- block-batched kernel (mesh_scan_blocks) ------------------
+
+def _random_stack(m, blocks, seed=0):
+    """B random same-width compiled programs on one stacked block axis."""
+    return mesh._stack_meshes(
+        [_random_mesh(m, 97 * seed + b)[1] for b in range(blocks)])
+
+
+@pytest.mark.parametrize("x_blocked", [False, True])
+@pytest.mark.parametrize("m,blocks,batch", [(12, 3, 9), (16, 4, 20)])
+def test_blocked_kernel_bitexact_vs_vmapped_xla(m, blocks, batch, x_blocked):
+    """The tentpole parity gate: ONE grid-folded pallas launch over the
+    stacked block axis == the vmapped per-block xla scan, bit for bit
+    (noise off) — shared and per-block batches, the fused per-block
+    diagonal epilogue, and ragged batch tiles (blk_b=8 forces several
+    partially-filled tiles, exercising the one-hot scratch cache)."""
+    stacked = _random_stack(m, blocks, seed=m + blocks)
+    rng = np.random.default_rng(0)
+    shape = (batch, blocks, m) if x_blocked else (batch, m)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    ps = jnp.asarray(rng.normal(size=(blocks, m)).astype(np.float32))
+    got = mesh._apply_stacked(stacked, x, x_blocked, backend="pallas",
+                              post_scale=ps, blk_b=8)
+    want = mesh._apply_stacked(stacked, x, x_blocked, backend="xla",
+                               post_scale=ps)
+    assert got.shape == want.shape == (batch, blocks, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_blocked_kernel_noise_off_is_statically_clean():
+    """A disabled PhaseNoise (both stds 0) with a key must be the
+    bit-identical program to no noise at all — std=0 may not trace any
+    drift code (no seed operand) into the kernel."""
+    from repro.photonics.pipeline import PhaseNoise
+    stacked = _random_stack(10, 3, seed=5)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(7, 10)).astype(np.float32))
+    clean = mesh._apply_stacked(stacked, x, False, backend="pallas")
+    noisy = mesh._apply_stacked(stacked, x, False, backend="pallas",
+                                noise=PhaseNoise(0.0, 0.0),
+                                key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(noisy), np.asarray(clean))
+    # and the traced jaxpr carries no randomness: identical to clean
+    key = jax.random.PRNGKey(3)
+    j_clean = str(jax.make_jaxpr(lambda v: mesh._apply_stacked(
+        stacked, v, False, backend="pallas"))(x))
+    j_noisy = str(jax.make_jaxpr(lambda v: mesh._apply_stacked(
+        stacked, v, False, backend="pallas", noise=PhaseNoise(0.0, 0.0),
+        key=key))(x))
+    assert j_clean == j_noisy
+
+
+def test_inkernel_noise_deterministic_per_key():
+    """In-kernel theta drift is a pure function of the step key: same
+    key -> identical output, different key -> different draw."""
+    from repro.photonics.pipeline import PhaseNoise
+    stacked = _random_stack(12, 2, seed=6)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(9, 12)).astype(np.float32))
+    noise = PhaseNoise(0.05, 0.0)
+    fn = jax.jit(lambda k: mesh._apply_stacked(
+        stacked, x, False, backend="pallas", noise=noise, key=k))
+    a = np.asarray(fn(jax.random.PRNGKey(11)))
+    b = np.asarray(fn(jax.random.PRNGKey(11)))
+    c = np.asarray(fn(jax.random.PRNGKey(12)))
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a - c).max() > 0.0
+
+
+def test_inkernel_theta_drift_matches_xla_perturb_stats():
+    """The splitmix32+Box-Muller drift drawn inside the kernel must be
+    the SAME noise model as the XLA ``PhaseNoise.perturb`` reference:
+    zero-mean output deviation with matching spread across step keys."""
+    from repro.photonics.pipeline import PhaseNoise
+    stacked = _random_stack(16, 2, seed=9)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    noise = PhaseNoise(0.05, 0.0)
+    clean = np.asarray(mesh._apply_stacked(stacked, x, False,
+                                           backend="xla"))
+
+    def deviations(backend):
+        fn = jax.jit(lambda k: mesh._apply_stacked(
+            stacked, x, False, backend=backend, noise=noise, key=k))
+        return np.stack([np.asarray(fn(jax.random.PRNGKey(i))) - clean
+                         for i in range(60)])
+
+    dp, dx = deviations("pallas"), deviations("xla")
+    assert abs(float(dp.mean())) < 0.01 and abs(float(dx.mean())) < 0.01
+    assert float(dp.std()) > 0.0
+    np.testing.assert_allclose(float(dp.std()), float(dx.std()), rtol=0.15)
+
+
 # ------------------- full ONN pipeline, x64 acceptance bar ------------------
 
 PALLAS_ORACLE_X64 = textwrap.dedent("""
@@ -163,3 +256,22 @@ def test_runspec_mesh_backend_flag_and_roundtrip():
     with pytest.raises(SpecError, match="invalid PhotonicsConfig"):
         RunSpec.from_json_dict(
             {"sync": {"photonics": {"mesh_backend": "bogus"}}})
+
+
+def test_runspec_blk_b_flag_and_roundtrip():
+    from repro.api import RunSpec, SpecError
+    spec = RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                              "--fidelity", "mesh",
+                              "--mesh-backend", "pallas",
+                              "--blk-b", "64"])
+    assert spec.sync.photonics.blk_b == 64
+    assert RunSpec.from_json(spec.to_json()) == spec
+    # the tiling knob only applies to the mesh fidelity
+    with pytest.raises(SpecError, match="blk-b"):
+        RunSpec.from_args(["--sync", "optinc", "--bits", "2",
+                           "--blk-b", "64"])
+    # blk_b must respect the 8-row sublane tile (config validation
+    # surfaces as a SpecError through a --spec file)
+    with pytest.raises(SpecError, match="invalid PhotonicsConfig"):
+        RunSpec.from_json_dict(
+            {"sync": {"photonics": {"fidelity": "mesh", "blk_b": 12}}})

@@ -225,6 +225,23 @@ def test_runtime_refuses_untrained_wide_bits(monkeypatch):
         runtime._build(PhotonicsConfig(fidelity="onn"), 8, 4)
 
 
+def test_runtime_cache_ignores_executor_and_tuning_knobs():
+    """mesh_backend / blk_b / noise stds select how a resolved module is
+    APPLIED, not what is built: sweeping them (xla-vs-pallas comparisons,
+    --blk-b-sweep, noise on/off) must hit ONE cached build instead of
+    re-running Givens programming per knob value."""
+    import dataclasses
+    ph = PhotonicsConfig(fidelity="mesh")
+    base = runtime.get_module(ph, 2, 3)
+    for variant in (dataclasses.replace(ph, mesh_backend="pallas"),
+                    dataclasses.replace(ph, blk_b=64),
+                    dataclasses.replace(ph, mesh_backend="pallas",
+                                        blk_b=256),
+                    dataclasses.replace(ph, theta_drift_std=0.02,
+                                        shot_noise_std=0.01)):
+        assert runtime.get_module(variant, 2, 3) is base
+
+
 def test_runtime_put_module_overrides():
     ph = PhotonicsConfig(fidelity="onn", k_inputs=1)
     module = ONNModule.exact_identity(2, 5)
