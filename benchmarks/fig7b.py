@@ -22,13 +22,22 @@ trained params) and scaled to the model's gradient element count — i.e.
 the real accuracy/latency trade-off of hardware-in-the-loop training as
 a benchmark row.  Rows mirror to results/bench/fig7b.json (CI artifact).
 
+``--noise-sweep`` runs a different experiment: end-to-end smoke training
+at ``--fidelity mesh`` across a grid of PhaseNoise settings
+(theta_drift_std x shot_noise_std), reporting first/last losses per
+point — does the emulated hardware's analog imperfection actually move
+the training trajectory, and when?  Rows go to
+results/bench/noise_sweep.json.
+
     PYTHONPATH=src python -m benchmarks.fig7b [--full] [--smoke]
+    PYTHONPATH=src python -m benchmarks.fig7b --noise-sweep [--full]
 """
 from __future__ import annotations
 
 import argparse
+import json
 
-from .common import emit, flush_json, timed
+from .common import emit, flush_json, run_subprocess, timed
 
 GPU_FLOPS = 60e12 * 0.6
 GPU_BW = 8 * 800e9 / 8          # bytes/s aggregate (800 Gb/s x 8 lanes)
@@ -104,6 +113,53 @@ def measure_emulator_us(batch: int) -> dict:
     return per_elem
 
 
+NOISE_RUN = """
+import json, io, contextlib
+import repro.launch.train as T
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    T.main(["--arch", "paper_llama", "--smoke-config", "--sync", "optinc",
+            "--bits", "2", "--fidelity", "mesh", "--steps", "{steps}",
+            "--global-batch", "8", "--seq-len", "128", "--lr", "1e-3",
+            "--mesh", "1x1", "--theta-drift-std", "{td}",
+            "--shot-noise-std", "{sn}"])
+recs = [json.loads(l) for l in buf.getvalue().splitlines() if l.startswith("{{")]
+last = sum(r["loss"] for r in recs[-3:]) / 3
+first = sum(r["loss"] for r in recs[:3]) / 3
+print(json.dumps({{"first": first, "last": last}}))
+"""
+
+# (theta_drift_std, shot_noise_std): clean reference, each mechanism
+# alone at the paper-plausible magnitude, combined, and 5x combined
+NOISE_GRID = [(0.0, 0.0), (0.02, 0.0), (0.0, 0.01), (0.02, 0.01),
+              (0.1, 0.05)]
+
+
+def noise_sweep(full: bool = False):
+    """PhaseNoise-vs-training-loss sweep at --fidelity mesh (end-to-end:
+    the noisy MZI emulator runs inside every jitted training step)."""
+    try:
+        _noise_sweep(full)
+    finally:
+        flush_json("noise_sweep")
+
+
+def _noise_sweep(full: bool):
+    steps = 25 if full else 8
+    clean_last = None
+    for td, sn in NOISE_GRID:
+        out = run_subprocess(NOISE_RUN.format(steps=steps, td=td, sn=sn),
+                             timeout=3000)
+        rec = json.loads(out.strip().splitlines()[-1])
+        if (td, sn) == (0.0, 0.0):
+            clean_last = rec["last"]
+        delta = rec["last"] - clean_last if clean_last is not None else 0.0
+        emit(f"noise_sweep.td{td:g}_sn{sn:g}", 0.0,
+             f"theta_drift_std={td:g} shot_noise_std={sn:g} "
+             f"loss_first={rec['first']:.4f} loss_last={rec['last']:.4f} "
+             f"loss_delta_vs_clean={delta:.4f} steps={steps}")
+
+
 def main(full: bool = False, smoke: bool = False):
     try:
         _run(full=full, smoke=smoke)
@@ -152,5 +208,11 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="small measurement batch (CI)")
+    ap.add_argument("--noise-sweep", action="store_true",
+                    help="PhaseNoise grid vs smoke-training loss at "
+                         "--fidelity mesh (rows to noise_sweep.json)")
     args = ap.parse_args()
-    main(full=args.full, smoke=args.smoke)
+    if args.noise_sweep:
+        noise_sweep(full=args.full)
+    else:
+        main(full=args.full, smoke=args.smoke)

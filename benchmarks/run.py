@@ -13,7 +13,7 @@ import sys
 import traceback
 
 from . import (common, fig6, fig7a, fig7b, mesh_emulation, roofline_table,
-               table1, table2, trained_onn)
+               serve_throughput, table1, table2, trained_onn)
 
 SECTIONS = {
     "table1": table1.main,
@@ -24,6 +24,7 @@ SECTIONS = {
     "mesh_emulation": mesh_emulation.main,
     "trained_onn": trained_onn.main,
     "roofline": roofline_table.main,
+    "serve_throughput": serve_throughput.main,
 }
 
 

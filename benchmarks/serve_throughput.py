@@ -1,0 +1,147 @@
+"""Serving-tier throughput: continuous batching vs sequential decode.
+
+The workload is a queue of requests with one prompt length but staggered
+generation budgets (real serving traffic: arrivals overlap, completions
+do not line up).  Two ways to drain it:
+
+  sequential   ServeSession.generate, one request at a time — the
+               pre-PR-7 serving story.  Every decode step advances ONE
+               sequence.
+  continuous   ServeEngine — every decode step advances every active
+               sequence (paged KV pool, admit/retire between steps), so
+               the per-step program launch and weight traffic are
+               amortized over up to ``max_active`` sequences.
+
+Both paths run the same greedy math (tests/test_serving.py proves the
+outputs identical), so the ratio is pure batching efficiency.  All jit
+programs are warmed before timing: the engine drains a full throwaway
+workload first, which visits every power-of-two occupancy bucket the
+timed run can touch.  Rows mirror to results/bench/serve_throughput.json
+(CI artifact + perf-regression baseline).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--full] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from .common import emit, flush_json
+
+PROMPT_LEN = 12
+MAX_SEQ = 64
+
+
+def _spec(max_active: int = 8):
+    from repro.api import RunSpec, ServeConfig
+    return dataclasses.replace(
+        RunSpec(arch="minitron_4b", smoke=True),
+        serve=ServeConfig(page_size=8, max_active=max_active,
+                          max_seq=MAX_SEQ, max_queue=64))
+
+
+def _workload(n_seqs: int, vocab: int):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, vocab, (PROMPT_LEN,)).tolist()
+               for _ in range(n_seqs)]
+    budgets = [6 + (i % 5) * 3 for i in range(n_seqs)]   # 6..18 tokens
+    return prompts, budgets
+
+
+def _drain_staggered(engine, prompts, budgets):
+    """Submit ``max_active`` requests up front, then one more per decode
+    step (staggered arrivals), and run to empty.  Returns tokens emitted."""
+    arrivals = list(zip(prompts, budgets))
+    head = arrivals[:engine.scfg.max_active]
+    rest = arrivals[len(head):]
+    rids = [engine.submit(p, b) for p, b in head]
+    while engine.has_work() or rest:
+        if rest:
+            p, b = rest.pop(0)
+            rids.append(engine.submit(p, b))
+        engine.step()
+    return sum(len(engine.results[r]) for r in rids)
+
+
+def _time_continuous(session, prompts, budgets, max_active: int):
+    eng = session.engine() if max_active == session.spec.serve.max_active \
+        else _engine_with(session, max_active)
+    _drain_staggered(eng, prompts, budgets)       # warmup: compiles every
+    eng.results.clear()                           # bucket + prefill shape
+    t0 = time.time()
+    toks = _drain_staggered(eng, prompts, budgets)
+    return toks, time.time() - t0, eng.max_observed_active
+
+
+def _engine_with(session, max_active: int):
+    from repro.serving.engine import ServeEngine
+    spec = dataclasses.replace(
+        session.spec,
+        serve=dataclasses.replace(session.spec.serve, max_active=max_active))
+    return ServeEngine(spec, params=session.params)
+
+
+def main(full: bool = False, smoke: bool = False):
+    try:
+        _run(full=full, smoke=smoke)
+    finally:
+        flush_json("serve_throughput")
+
+
+def _run(full: bool, smoke: bool):
+    from repro.api import ServeSession
+
+    spec = _spec()
+    session = ServeSession(spec)
+    n_seqs = 8 if smoke else 16
+    prompts, budgets = _workload(n_seqs, session.cfg.vocab)
+
+    # ---- sequential baseline (one request at a time, static batch of 1)
+    session.generate(np.asarray([prompts[0]]), gen_len=max(budgets),
+                     max_seq=MAX_SEQ)             # warmup: prefill + decode
+    t0 = time.time()
+    seq_toks = 0
+    for p, b in zip(prompts, budgets):
+        out = session.generate(np.asarray([p]), gen_len=b, max_seq=MAX_SEQ)
+        seq_toks += out.shape[1]
+    seq_dt = time.time() - t0
+    emit("serve_throughput.sequential", 1e6 * seq_dt / seq_toks,
+         f"tok_s={seq_toks / seq_dt:.1f} n_seqs={n_seqs} tokens={seq_toks}")
+
+    # ---- continuous batching through the paged-KV engine
+    cont_toks, cont_dt, peak = _time_continuous(session, prompts, budgets,
+                                                spec.serve.max_active)
+    assert cont_toks == seq_toks, (cont_toks, seq_toks)
+    speedup = seq_dt / cont_dt
+    emit("serve_throughput.continuous", 1e6 * cont_dt / cont_toks,
+         f"tok_s={cont_toks / cont_dt:.1f} n_seqs={n_seqs} "
+         f"tokens={cont_toks} max_active={spec.serve.max_active} "
+         f"peak_concurrency={peak} speedup_vs_sequential={speedup:.2f}")
+    if speedup <= 1.0:
+        raise RuntimeError(
+            f"continuous batching ({cont_toks / cont_dt:.1f} tok/s) did not "
+            f"beat sequential decode ({seq_toks / seq_dt:.1f} tok/s)")
+
+    if full:
+        # concurrency scaling: same workload, shrinking slot counts
+        for ma in (1, 2, 4):
+            toks, dt, peak = _time_continuous(session, prompts, budgets, ma)
+            emit(f"serve_throughput.continuous_ma{ma}", 1e6 * dt / toks,
+                 f"tok_s={toks / dt:.1f} n_seqs={n_seqs} max_active={ma} "
+                 f"peak_concurrency={peak}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="add the max_active concurrency sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller request count (CI)")
+    args = ap.parse_args()
+    try:
+        main(full=args.full, smoke=args.smoke)
+    except RuntimeError as e:
+        raise SystemExit(str(e))

@@ -1,13 +1,17 @@
-"""Batched serving example — a thin client of ``repro.api.ServeSession``:
-prefill a batch of prompts, then greedy-decode with the KV cache through
-the shard_map serving path (the same programs the decode_32k / long_500k
-dry-run cells lower).
+"""Serving example — thin clients of the two inference tiers:
+
+1. ``repro.api.ServeSession``: static-batch greedy generation (compiled
+   prefill over the prompt batch, then one decode step per token).
+2. ``repro.serving.ServeEngine``: continuous batching over a paged KV
+   pool — requests with different prompt lengths and budgets are
+   admitted, decoded together, and retired independently.
 
   PYTHONPATH=src python examples/serve_decode.py [--arch minitron_4b] \
       [--prompt-len 24] [--gen-len 16] [--batch 4] [--ckpt-dir DIR]
 
 With --ckpt-dir the session serves the newest checkpointed params of a
-trained run instead of a fresh init.
+trained run instead of a fresh init (add --reload-every N on a live run
+to hot-swap newer checkpoints into the engine while it serves).
 """
 import argparse
 import sys
@@ -52,11 +56,37 @@ def main():
 
     max_seq = args.prompt_len + args.gen_len + 24  # headroom for the cache
     t0 = time.time()
-    gen = session.generate(prompts, args.gen_len, max_seq=max_seq)
+    gen = session.generate(prompts, args.gen_len, max_seq=max_seq,
+                           enc_frames=enc)
     dt = time.time() - t0
     print(f"decoded {args.gen_len} tokens x {args.batch} seqs in {dt:.2f}s "
           f"({args.batch * args.gen_len / dt:.1f} tok/s on 1 CPU core)")
     print("generated ids[0]:", np.asarray(gen[0]).tolist())
+
+    # ---- continuous batching: mixed prompt lengths + budgets through the
+    # paged-KV engine (dense-attention archs only)
+    from repro.serving import supports_paged
+    if not supports_paged(cfg):
+        print(f"{cfg.name}: no paged cache — skipping the engine demo")
+        return
+    engine = session.engine()
+    reqs = [rng.integers(0, cfg.vocab,
+                         (args.prompt_len - 4 + 3 * (i % 4),)).tolist()
+            for i in range(args.batch * 2)]
+    budgets = [args.gen_len - 4 + 2 * (i % 5) for i in range(len(reqs))]
+    t0 = time.time()
+    results = {}
+    rids = [engine.submit(p, b) for p, b in zip(reqs, budgets)]
+    n_steps = 0
+    while engine.has_work():
+        engine.step()
+        n_steps += 1
+    dt = time.time() - t0
+    toks = sum(len(engine.results[r]) for r in rids)
+    print(f"continuous batching: {len(reqs)} reqs, {toks} tokens in "
+          f"{n_steps} steps / {dt:.2f}s ({toks / dt:.1f} tok/s, peak "
+          f"concurrency {engine.max_observed_active})")
+    print("engine ids[rid 0]:", engine.results[rids[0]])
 
 
 if __name__ == "__main__":

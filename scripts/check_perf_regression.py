@@ -17,7 +17,8 @@ just happened, e.g. the CI benchmarks-smoke job) against the committed
   headroom) for the noise-free mesh rows.
 
   PYTHONPATH=src python scripts/check_perf_regression.py \
-      [--sections mesh_emulation,fig7b] [--tol 4.0] [--ratio-cap 2.0]
+      [--sections mesh_emulation,fig7b,serve_throughput] [--tol 4.0] \
+      [--ratio-cap 2.0]
 
 Refresh a baseline by re-running the benchmark on a quiet machine and
 copying ``results/bench/<section>.json`` over the ``_baseline`` file.
@@ -87,7 +88,8 @@ def main() -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--sections", default="mesh_emulation,fig7b",
+    ap.add_argument("--sections",
+                    default="mesh_emulation,fig7b,serve_throughput",
                     help="comma-separated baseline sections to gate")
     ap.add_argument("--tol", type=float, default=4.0,
                     help="allowed fresh/baseline us_per_call ratio "

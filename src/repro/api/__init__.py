@@ -13,6 +13,7 @@ from ..collectives import SyncConfig
 from ..data import DataConfig
 from ..optim import AdamWConfig
 from ..photonics import PhotonicsConfig
+from ..serving.config import ServeConfig
 from .build import (build_decode_step, build_prefill_step, build_train_step,
                     decode_cache_specs, init_sync_state, param_specs,
                     sync_state_specs)
@@ -24,8 +25,9 @@ from .spec import (CheckpointConfig, MeshSpec, RunSpec, SpecError,
                    SpecMismatchError, validate_resume_compat)
 
 __all__ = [
-    "RunSpec", "MeshSpec", "CheckpointConfig", "SyncConfig", "AdamWConfig",
-    "DataConfig", "PhotonicsConfig", "SpecError", "SpecMismatchError",
+    "RunSpec", "MeshSpec", "CheckpointConfig", "ServeConfig", "SyncConfig",
+    "AdamWConfig", "DataConfig", "PhotonicsConfig", "SpecError",
+    "SpecMismatchError",
     "validate_resume_compat",
     "TrainSession", "ServeSession",
     "Callback", "JsonlLogger", "PeriodicCheckpoint", "SigtermHandler",

@@ -26,6 +26,7 @@ from ..launch.mesh import make_mesh
 from ..models.layers import ShardCtx
 from ..optim import AdamWConfig
 from ..photonics import FIDELITIES, MESH_BACKENDS
+from ..serving.config import ServeConfig
 
 
 class SpecError(ValueError):
@@ -136,6 +137,7 @@ class RunSpec:
     # the CLI keeps the legacy train.py behavior (--seed feeds both)
     data: DataConfig = DataConfig(vocab=0, seed=0)
     ckpt: CheckpointConfig = CheckpointConfig()
+    serve: ServeConfig = ServeConfig()
     steps: int = 100
     seed: int = 0
     watchdog: float = 3.0               # straggler threshold (x median)
@@ -217,6 +219,15 @@ class RunSpec:
                             f"divisible by pods*dp = {dp_total}")
         if self.ckpt.resume and not self.ckpt.dir:
             raise SpecError("ckpt.resume requires ckpt.dir")
+        if self.serve.max_seq < self.serve.page_size:
+            raise SpecError(f"serve.max_seq ({self.serve.max_seq}) must be "
+                            f">= serve.page_size ({self.serve.page_size})")
+        if self.serve.top_k and self.serve.temperature == 0:
+            raise SpecError("--top-k samples from the softmax and needs "
+                            "--temperature > 0 (temperature 0 = greedy)")
+        if self.serve.reload_every and not self.ckpt.dir:
+            raise SpecError("--reload-every polls the checkpoint directory "
+                            "and needs --ckpt-dir")
         return self
 
     # ------------------------------------------------ JSON round-trip
@@ -317,6 +328,31 @@ class RunSpec:
         ap.add_argument("--watchdog", type=float)
         ap.add_argument("--seed", type=int)
         ap.add_argument("--log", help="JSONL metrics file")
+        # serving tier (RunSpec.serve — repro.serving)
+        ap.add_argument("--page-size", type=int,
+                        help="serving: tokens per paged-KV page")
+        ap.add_argument("--max-active", type=int,
+                        help="serving: concurrently decoding sequences")
+        ap.add_argument("--max-queue", type=int,
+                        help="serving: queued-request cap")
+        ap.add_argument("--max-seq", type=int,
+                        help="serving: per-sequence cache capacity "
+                             "(prompt + generation)")
+        ap.add_argument("--max-new-tokens", type=int,
+                        help="serving: default per-request generation budget")
+        ap.add_argument("--stop-token", type=int,
+                        help="serving: end-of-sequence token id (-1 = none)")
+        ap.add_argument("--temperature", type=float,
+                        help="serving: sampling temperature (0 = greedy)")
+        ap.add_argument("--top-k", type=int,
+                        help="serving: sample from the k best logits "
+                             "(0 = full vocab)")
+        ap.add_argument("--serve-pages", type=int,
+                        help="serving: physical KV pool size in pages "
+                             "(0 = auto, pressure-free)")
+        ap.add_argument("--reload-every", type=int,
+                        help="serving: poll --ckpt-dir for newer params "
+                             "every N engine steps (hot-swap; 0 = off)")
 
     @classmethod
     def from_args(cls, argv=None, description: str | None = None) -> "RunSpec":
@@ -391,6 +427,14 @@ class RunSpec:
             ckpt_kw["keep"] = ns.pop("ckpt_keep")
         if "resume" in ns:
             ckpt_kw["resume"] = ns.pop("resume")
+        serve_kw = {}
+        for k in ("page_size", "max_active", "max_queue", "max_seq",
+                  "max_new_tokens", "stop_token", "temperature", "top_k",
+                  "reload_every"):
+            if k in ns:
+                serve_kw[k] = ns.pop(k)
+        if "serve_pages" in ns:
+            serve_kw["pages"] = ns.pop("serve_pages")
         for k in ("steps", "watchdog", "log"):
             if k in ns:
                 top_kw[k] = ns.pop(k)
@@ -410,6 +454,7 @@ class RunSpec:
             optim=dataclasses.replace(self.optim, **opt_kw),
             data=dataclasses.replace(self.data, **data_kw),
             ckpt=dataclasses.replace(self.ckpt, **ckpt_kw),
+            serve=dataclasses.replace(self.serve, **serve_kw),
             **top_kw)
 
 

@@ -17,8 +17,9 @@ from jax import lax
 
 from .config import ModelConfig
 from .layers import (NEG_INF, ShardCtx, blocked_attention, decode_attention,
-                     embed_lookup, gather_fsdp, rmsnorm, rope, sp_gather,
-                     sp_out, swiglu_mlp, update_cache)
+                     embed_lookup, gather_fsdp, paged_gather,
+                     paged_update_cache, rmsnorm, rope, sp_gather, sp_out,
+                     swiglu_mlp, update_cache)
 
 
 def _heads_local(h: int, tp: int) -> int:
@@ -40,30 +41,44 @@ def _qk_headnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 # ============================ GQA attention ============================
 
+def _gqa_qkv(ctx: ShardCtx, cfg: ModelConfig, p, x, pos):
+    """Shared self-attention q/k/v projection + qk-norm + RoPE.  The
+    contiguous decode path and the paged continuous-batching path both go
+    through this, so their per-token math stays bit-identical.  pos: (t,)
+    shared positions or (b, t) per-slot positions (rope handles both)."""
+    h = sp_gather(ctx, rmsnorm(x, p["norm"]))
+    b, t, d = h.shape
+    hl = p["wq"].shape[-1] // cfg.hd
+    kvl = p["wk"].shape[-1] // cfg.hd
+    q = (h @ gather_fsdp(ctx, p["wq"], 0)).reshape(b, t, hl, cfg.hd)
+    k = (h @ gather_fsdp(ctx, p["wk"], 0)).reshape(b, t, kvl, cfg.hd)
+    v = (h @ gather_fsdp(ctx, p["wv"], 0)).reshape(b, t, kvl, cfg.hd)
+    if cfg.qk_norm:
+        q = _qk_headnorm(q, p["q_norm"])
+        k = _qk_headnorm(k, p["k_norm"])
+    if pos is not None:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
 def gqa_attention(ctx: ShardCtx, cfg: ModelConfig, p, x, pos,
                   cache=None, cache_pos=None, kv_ext=None, causal=True):
     """p: layer params dict. x: (b, t, d). pos: (t,) positions for RoPE.
 
     cache=(k,v) enables decode mode (t == 1). kv_ext=(k,v) enables
     cross-attention (whisper decoder). Returns (out, new_cache)."""
-    h = sp_gather(ctx, rmsnorm(x, p["norm"]))
-    b, t, d = h.shape
-    hl = p["wq"].shape[-1] // cfg.hd
-    kvl = p["wk"].shape[-1] // cfg.hd
-    q = (h @ gather_fsdp(ctx, p["wq"], 0)).reshape(b, t, hl, cfg.hd)
     if kv_ext is None:
-        k = (h @ gather_fsdp(ctx, p["wk"], 0)).reshape(b, t, kvl, cfg.hd)
-        v = (h @ gather_fsdp(ctx, p["wv"], 0)).reshape(b, t, kvl, cfg.hd)
-        if cfg.qk_norm:
-            q = _qk_headnorm(q, p["q_norm"])
-            k = _qk_headnorm(k, p["k_norm"])
-        if pos is not None:
-            q = rope(q, pos, cfg.rope_theta)
-            k = rope(k, pos, cfg.rope_theta)
+        q, k, v = _gqa_qkv(ctx, cfg, p, x, pos)
     else:
+        h = sp_gather(ctx, rmsnorm(x, p["norm"]))
+        hl = p["wq"].shape[-1] // cfg.hd
+        q = (h @ gather_fsdp(ctx, p["wq"], 0)).reshape(
+            *h.shape[:2], hl, cfg.hd)
         k, v = kv_ext
         if cfg.qk_norm:
             q = _qk_headnorm(q, p["q_norm"])
+    b, t, hl = q.shape[:3]
     q = q.transpose(0, 2, 1, 3)                      # (b, hl, t, hd)
     new_cache = None
     if cache is not None and kv_ext is None:
@@ -82,6 +97,32 @@ def gqa_attention(ctx: ShardCtx, cfg: ModelConfig, p, x, pos,
     attn = attn.transpose(0, 2, 1, 3).reshape(b, t, hl * cfg.hd)
     out = attn @ gather_fsdp(ctx, p["wo"], 1)
     return sp_out(ctx, out), new_cache
+
+
+def gqa_decode_paged(ctx: ShardCtx, cfg: ModelConfig, p, x, lengths,
+                     pool_kv, page_table):
+    """One paged decode step of GQA self-attention over a packed slot
+    batch (continuous batching).  x: (b, 1, d) each slot's pending token;
+    lengths: (b,) tokens already cached per slot (the new token's
+    position); pool_kv: {"k","v"} physical page pools (P, hkv_local,
+    page, hd); page_table: (b, nb) per-slot page ids.  Returns
+    (out, new_pool_kv) — the same per-token math as the contiguous
+    gqa_attention decode branch, so outputs match it bit-exactly."""
+    ps = pool_kv["k"].shape[2]
+    q, k, v = _gqa_qkv(ctx, cfg, p, x, lengths[:, None])
+    q = q.transpose(0, 2, 1, 3)                      # (b, hl, 1, hd)
+    k = k.transpose(0, 2, 1, 3)                      # (b, kvl, 1, hd)
+    v = v.transpose(0, 2, 1, 3)
+    page_ids = jnp.take_along_axis(page_table, (lengths // ps)[:, None],
+                                   axis=1)[:, 0]
+    kp = paged_update_cache(pool_kv["k"], k, page_ids, lengths % ps)
+    vp = paged_update_cache(pool_kv["v"], v, page_ids, lengths % ps)
+    attn = decode_attention(ctx, q, paged_gather(kp, page_table),
+                            paged_gather(vp, page_table), lengths + 1)
+    b, hl = q.shape[:2]
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, hl * cfg.hd)
+    out = attn @ gather_fsdp(ctx, p["wo"], 1)
+    return sp_out(ctx, out), {"k": kp, "v": vp}
 
 
 # ========================= MLA (deepseek-v3) ==========================

@@ -229,9 +229,11 @@ def decode_attention(ctx: ShardCtx, q: jnp.ndarray, k_cache: jnp.ndarray,
     """One-token attention over a (possibly sequence-sharded) KV cache.
 
     q: (b, h, 1, hd); k_cache/v_cache: (b, hkv, S_local, hd); pos: ()
-    global number of valid cache entries. When ctx.seq_shard_cache, the
-    cache's S dim is sharded over the data axis and partial softmax stats
-    are merged across it (flash-decode)."""
+    global number of valid cache entries, or (b,) per-slot counts (the
+    continuous-batching engine packs sequences of different lengths into
+    one batch). When ctx.seq_shard_cache, the cache's S dim is sharded
+    over the data axis and partial softmax stats are merged across it
+    (flash-decode)."""
     b, h, _, hd = q.shape
     hkv, s_local = k_cache.shape[1], k_cache.shape[2]
     rep = h // hkv
@@ -243,8 +245,13 @@ def decode_attention(ctx: ShardCtx, q: jnp.ndarray, k_cache: jnp.ndarray,
         offset = lax.axis_index(ctx.data_axis) * s_local
     else:
         offset = 0
-    valid = (offset + jnp.arange(s_local)) < pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pos = jnp.asarray(pos)
+    idx = offset + jnp.arange(s_local)
+    if pos.ndim:
+        valid = (idx[None, :] < pos[:, None])[:, None, None, :]
+    else:
+        valid = (idx < pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     if ctx.seq_shard_cache:
         m = lax.pmax(m, ctx.data_axis)
@@ -284,3 +291,27 @@ def update_cache(cache: jnp.ndarray, new: jnp.ndarray, pos,
         return jnp.where(mine, updated, cache)
     return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
                                     (0, 0, pos, 0))
+
+
+# -------------------------- paged KV cache ---------------------------
+
+def paged_update_cache(pool: jnp.ndarray, new: jnp.ndarray, page_ids,
+                       offsets) -> jnp.ndarray:
+    """Write one decode step's K or V for a packed slot batch into a paged
+    pool.  pool: (P, hkv, page, hd) physical pages shared by every slot;
+    new: (b, hkv, 1, hd); page_ids/offsets: (b,) each slot's target page
+    and in-page offset.  Inactive slot rows point at the reserved null
+    page 0, whose contents are never read as valid."""
+    return pool.at[page_ids, :, offsets, :].set(
+        new[:, :, 0, :].astype(pool.dtype))
+
+
+def paged_gather(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize each slot's pages as a contiguous (b, hkv, nb*page, hd)
+    KV view.  pool: (P, hkv, page, hd); page_table: (b, nb) page ids in
+    logical-block order.  Table entries beyond a slot's allocation hit the
+    null page and are masked out by decode_attention's validity test."""
+    b, nb = page_table.shape
+    _, hkv, ps, hd = pool.shape
+    pages = jnp.take(pool, page_table, axis=0)       # (b, nb, hkv, ps, hd)
+    return pages.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nb * ps, hd)

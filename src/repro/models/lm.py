@@ -770,6 +770,37 @@ def decode_step(cfg: ModelConfig, ctx: ShardCtx, params, cache, token,
     return logits, new_cache
 
 
+def paged_decode_step(cfg: ModelConfig, ctx: ShardCtx, params, pool,
+                      page_table, lengths, token):
+    """One continuous-batching decode step over a paged KV pool
+    (dense-attention transformer families — the serving engine's path;
+    recurrent/enc-dec/MoE caches keep the contiguous decode_step).
+
+    pool: {"layers": {"k"/"v": (L, P, hkv_local, page, hd)}} physical
+    pages shared by every slot; page_table: (b, nb) per-slot page ids;
+    lengths: (b,) tokens already cached per slot; token: (b, 1) pending
+    tokens.  Returns (logits (b, V_local), new_pool)."""
+    assert not (cfg.ssm or cfg.enc_dec or cfg.moe), \
+        f"paged decode needs a dense-attention cache, got {cfg.name}"
+    x = embed_lookup(ctx, gather_fsdp(ctx, params["embed"], 1), token,
+                     cfg.vocab)
+
+    def body(x, pc):
+        p, kv = pc
+        a, nkv = blocks.gqa_decode_paged(ctx, cfg, p, x, lengths, kv,
+                                         page_table)
+        x = x + a
+        h = rmsnorm(x, p["mlp_norm"])
+        x = x + blocks.swiglu_mlp(ctx, h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, nkv
+
+    x, nkv = lax.scan(body, x, (params["layers"], pool["layers"]))
+    h = rmsnorm(x, params["final_norm"])
+    logits = (h[:, 0] @ gather_fsdp(ctx, params["lm_head"], 0)
+              ).astype(jnp.float32)
+    return logits, {"layers": nkv}
+
+
 def prefill_step(cfg: ModelConfig, ctx: ShardCtx, params, tokens,
                  enc_frames=None):
     """Inference prefill: forward over the prompt, returning last-token

@@ -1,0 +1,35 @@
+"""repro.serving: continuous-batching inference tier.
+
+- ``config``    — frozen ServeConfig (embedded in RunSpec as ``serve``)
+- ``kv_pool``   — paged KV cache: page pool, allocator, prompt scatter
+- ``scheduler`` — admission / growth / preemption bookkeeping
+- ``engine``    — ServeEngine: one jitted decode step over the packed
+                  active batch (loaded lazily: it imports repro.api)
+- ``reload``    — param resolution + checkpoint hot-swap (lazy, same)
+"""
+from .config import ServeConfig
+from .kv_pool import NULL_PAGE, PageAllocator, init_pool, pool_specs, \
+    supports_paged, write_prompt
+from .scheduler import QueueFull, Request, Scheduler, Sequence
+
+__all__ = [
+    "ServeConfig", "NULL_PAGE", "PageAllocator", "init_pool", "pool_specs",
+    "supports_paged", "write_prompt", "QueueFull", "Request", "Scheduler",
+    "Sequence", "ServeEngine", "ParamReloader", "load_params",
+    "resolve_params",
+]
+
+_LAZY = {"ServeEngine": "engine",
+         "ParamReloader": "reload",
+         "load_params": "reload",
+         "resolve_params": "reload"}
+
+
+def __getattr__(name):
+    # engine/reload import repro.api (which imports serving.config);
+    # loading them lazily keeps `import repro.serving` cycle-free
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

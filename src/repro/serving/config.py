@@ -1,0 +1,63 @@
+"""ServeConfig: the frozen serving-tier half of a RunSpec.
+
+Lives in its own module (no repro.api imports) so ``api.spec`` can embed
+it in RunSpec without a cycle: spec -> serving.config only.  Field checks
+raise ValueError from ``__post_init__`` — ``_from_dict`` wraps those in
+SpecError on the JSON path, and RunSpec.validate() adds the cross-field
+rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching inference-tier knobs.
+
+    ``max_seq`` bounds prompt + generation per sequence; the page table is
+    ``ceil(max_seq / page_size)`` blocks wide.  ``pages`` sizes the shared
+    physical KV pool (0 = auto: every slot can hold a full max_seq plus
+    the reserved null page — no preemption possible; smaller values admit
+    optimistically and preempt under pressure).  ``reload_every`` polls
+    ``ckpt.dir`` for a newer checkpoint every N engine steps (hot-swap).
+    """
+    page_size: int = 16       # tokens per KV page
+    max_active: int = 8       # concurrently decoding sequences (slots)
+    max_queue: int = 64       # queued-but-not-admitted request cap
+    max_seq: int = 256        # per-sequence cache capacity (prompt + gen)
+    max_new_tokens: int = 64  # default per-request generation budget
+    stop_token: int = -1      # end-of-sequence token id (-1 = none)
+    temperature: float = 0.0  # 0 = greedy argmax
+    top_k: int = 0            # sample from the k best logits (0 = full vocab)
+    pages: int = 0            # physical KV pool size in pages (0 = auto)
+    reload_every: int = 0     # hot-swap poll period in engine steps (0 = off)
+
+    def __post_init__(self):
+        for name in ("page_size", "max_active", "max_queue", "max_seq",
+                     "max_new_tokens"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"serve.{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        for name in ("temperature", "top_k", "pages", "reload_every"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"serve.{name} must be >= 0, "
+                                 f"got {getattr(self, name)}")
+        if self.stop_token < -1:
+            raise ValueError(f"serve.stop_token must be a token id or -1, "
+                             f"got {self.stop_token}")
+
+    @property
+    def max_blocks(self) -> int:
+        """Page-table width: logical blocks per sequence."""
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def capacity(self) -> int:
+        """Tokens one sequence's page table can address."""
+        return self.max_blocks * self.page_size
+
+    def auto_pages(self) -> int:
+        """Pool size when ``pages`` is 0: one null page + a full page
+        table per slot (pressure-free)."""
+        return self.pages or 1 + self.max_active * self.max_blocks

@@ -1,0 +1,213 @@
+"""ServeEngine: continuous-batching decode over the paged KV pool.
+
+One jitted decode step advances EVERY active sequence by one token:
+admitted sequences prefill through the compiled prefill step (their KV
+scattered into freshly-allocated pages), then join the packed slot
+batch.  Sequences finish (budget / stop token) and new arrivals are
+admitted between steps, so the batch membership changes continuously —
+the classic continuous-batching loop, vs. ServeSession.generate's
+static batch.
+
+The packed batch is padded to a power-of-two bucket (capped at
+``max_active``) so the decode step retraces O(log max_active) times,
+not once per occupancy.  Inactive pad rows carry length 0 and an
+all-null page table: they scatter into / gather from the reserved null
+page and their logits are discarded.
+
+repro.api is imported function-locally (api.spec imports
+serving.config — a module-level import here would cycle).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models import lm
+from . import kv_pool, reload
+from .scheduler import Scheduler, Sequence
+
+
+class ServeEngine:
+    def __init__(self, spec, params=None):
+        from ..api import build
+        spec.validate()
+        self.spec = spec
+        self.scfg = spec.serve
+        self.cfg = spec.model_config()
+        if not kv_pool.supports_paged(self.cfg):
+            raise NotImplementedError(
+                f"paged serving covers the dense-attention families; "
+                f"{self.cfg.name} (ssm/enc-dec/moe) serves through "
+                f"ServeSession instead")
+        if spec.mesh.dp * spec.mesh.pods != 1:
+            raise NotImplementedError(
+                "ServeEngine shards over 'model' only (prefill runs one "
+                "sequence at a time and decode occupancy is dynamic — "
+                "neither can keep a data axis busy); use a 1xTP mesh")
+        self.mesh = spec.mesh.build()
+        # decode-path ctx: SP/remat are train-time concerns (mirrors
+        # make_decode_step, which never enables them)
+        ctx = dataclasses.replace(spec.mesh.ctx(), seq_parallel=False,
+                                  remat_groups=0)
+        self.ctx = ctx
+
+        if params is not None:
+            self.params, self.params_step = params, None
+        else:
+            self.params, self.params_step = reload.resolve_params(
+                spec, self.cfg, self.mesh)
+        self.reloader = None
+        if spec.ckpt.dir and self.scfg.reload_every > 0:
+            self.reloader = reload.ParamReloader(
+                spec, self.cfg, self.mesh, current_step=self.params_step)
+
+        n_pages = self.scfg.auto_pages()
+        with jax.set_mesh(self.mesh):
+            self.pool = kv_pool.init_pool(self.cfg, ctx, n_pages,
+                                          self.scfg.page_size)
+        self.sched = Scheduler(self.scfg, kv_pool.PageAllocator(n_pages))
+
+        pre, _, _ = build.build_prefill_step(spec, self.cfg, self.mesh)
+        self._prefill = jax.jit(pre)
+        p_specs = lm.flat_specs(self.cfg, ctx)
+        pspec = kv_pool.pool_specs(ctx)
+
+        def step(params, pool, page_table, lengths, token):
+            return lm.paged_decode_step(self.cfg, ctx, params, pool,
+                                        page_table, lengths, token)
+
+        self._decode = jax.jit(
+            jax.shard_map(step, mesh=self.mesh,
+                          in_specs=(p_specs, pspec, P(None, None), P(None),
+                                    P(None, None)),
+                          out_specs=(P(None, ctx.model_axis), pspec),
+                          check_vma=False),
+            donate_argnums=(1,))
+        self._write_prompt = jax.jit(kv_pool.write_prompt,
+                                     donate_argnums=(0,))
+
+        self.results: dict = {}      # rid -> list of generated token ids
+        self.step_count = 0
+        self.max_observed_active = 0
+
+    # -------------------------------------------------------------- intake
+    def submit(self, prompt, max_new_tokens=None) -> int:
+        return self.sched.submit(prompt, max_new_tokens)
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    # ---------------------------------------------------------------- step
+    def step(self):
+        """Advance every active sequence by one token.  Returns the list
+        of (rid, token) pairs emitted this step (prefill first-tokens of
+        newly admitted sequences included)."""
+        self.step_count += 1
+        if (self.reloader is not None
+                and self.step_count % self.scfg.reload_every == 0):
+            swapped = self.reloader.poll()
+            if swapped is not None:
+                self.params, self.params_step = swapped
+                print(f"hot-swapped params to checkpoint step "
+                      f"{self.params_step}", flush=True)
+        emitted = []
+        with jax.set_mesh(self.mesh):
+            for seq in self.sched.admit():
+                emitted += self._prefill_seq(seq)
+            self._ensure_growth()
+            act = self.sched.active
+            self.max_observed_active = max(self.max_observed_active, len(act))
+            if not act:
+                return emitted
+            b = min(max(1, 1 << (len(act) - 1).bit_length()),
+                    self.scfg.max_active)
+            pt = np.zeros((b, self.scfg.max_blocks), np.int32)
+            ln = np.zeros((b,), np.int32)
+            tok = np.zeros((b, 1), np.int32)
+            for i, seq in enumerate(act):
+                pt[i, :len(seq.pages)] = seq.pages
+                ln[i] = seq.length
+                tok[i, 0] = seq.last_token
+            logits, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(pt), jnp.asarray(ln),
+                jnp.asarray(tok))
+            toks = self._sample(logits[:len(act)], act)
+        for seq, t in zip(list(act), toks):
+            seq.length += 1
+            emitted += self._push_token(seq, int(t))
+        return emitted
+
+    def _ensure_growth(self):
+        """Every active sequence gets a page for its next cache entry;
+        when the pool runs dry the youngest sequences are preempted
+        (pages freed, request re-queued with its generated tokens) until
+        the remaining ones fit."""
+        i = 0
+        while i < len(self.sched.active):
+            seq = self.sched.active[i]
+            if self.sched.grow(seq):
+                i += 1
+                continue
+            victim = self.sched.preempt_youngest()
+            if victim is seq:  # even alone it can't grow — re-queued
+                break
+
+    def _prefill_seq(self, seq: Sequence):
+        """Compiled prefill over prompt + any previously generated tokens
+        (preemption resume), KV scattered into the sequence's pages, and
+        the first token sampled from the prefill logits."""
+        req = seq.req
+        feed = req.prompt + req.generated
+        logits, pkv = self._prefill(
+            self.params, {"tokens": jnp.asarray([feed], jnp.int32)})
+        self.pool = self._write_prompt(self.pool, pkv,
+                                       jnp.asarray(seq.pages, jnp.int32))
+        t = int(self._sample(logits, [seq])[0])
+        return self._push_token(seq, t)
+
+    def _push_token(self, seq: Sequence, tok: int):
+        seq.req.generated.append(tok)
+        seq.last_token = tok
+        if self._stopped(seq):
+            req = self.sched.finish(seq)
+            self.results[req.rid] = list(req.generated)
+        return [(seq.req.rid, tok)]
+
+    def _stopped(self, seq: Sequence) -> bool:
+        req = seq.req
+        return (len(req.generated) >= req.max_new_tokens
+                or seq.last_token == self.scfg.stop_token
+                or seq.length >= self.scfg.capacity)
+
+    # -------------------------------------------------------------- sample
+    def _sample(self, logits, seqs):
+        logits = logits[:, :self.cfg.vocab]
+        if self.scfg.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        out = []
+        for row, seq in zip(logits, seqs):
+            # per-(request, position) key: deterministic under preemption
+            # and re-batching
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.spec.seed),
+                                   seq.req.rid),
+                len(seq.req.generated))
+            row = row / self.scfg.temperature
+            if self.scfg.top_k:
+                kth = jnp.sort(row)[-self.scfg.top_k]
+                row = jnp.where(row < kth, -jnp.inf, row)
+            out.append(int(jax.random.categorical(key, row)))
+        return np.asarray(out)
+
+    # --------------------------------------------------------------- drive
+    def serve(self, prompts, max_new_tokens=None) -> dict:
+        """Submit a batch of prompts and run the engine to drain.
+        Returns {rid: np.ndarray of generated token ids}."""
+        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        while self.has_work():
+            self.step()
+        return {rid: np.asarray(self.results[rid]) for rid in rids}

@@ -1,0 +1,106 @@
+"""Paged KV cache: a shared physical page pool + a free-list allocator.
+
+The contiguous decode cache (``lm.init_cache``) allocates ``max_seq``
+slots per sequence up front; the paged pool instead holds one flat axis
+of fixed-size pages shared by every active sequence, addressed through
+per-sequence page tables.  Memory scales with TOKENS IN FLIGHT, not with
+``max_active * max_seq``.
+
+Layout per K/V leaf: ``(L, P, hkv_local, page_size, hd)`` — the dense
+family's ``(L, b, hkv_local, max_seq, hd)`` cache with the (batch, seq)
+dims replaced by one physical page axis.  Sharding follows the same
+``ShardCtx`` convention (kv heads over 'model'); the page axis is never
+sharded, so tp layouts keep working unchanged.
+
+**Page 0 is the reserved null page**: fresh page tables point every block
+at it, so inactive slot rows and not-yet-allocated blocks scatter/gather
+into it harmlessly (its contents are finite garbage, masked to exactly
+zero weight by ``decode_attention``'s validity test).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import lm
+from ..models.config import ModelConfig
+from ..models.layers import ShardCtx
+
+NULL_PAGE = 0
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving covers the dense-attention transformer families
+    (cache tree {"layers": {"k", "v"}}); recurrent / enc-dec / MoE
+    caches stay on the contiguous ServeSession path."""
+    return not (cfg.ssm or cfg.enc_dec or cfg.moe)
+
+
+class PageAllocator:
+    """All-or-nothing free-list allocator over page ids 1..n_pages-1
+    (page 0 is reserved as the null page, never handed out)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"pool needs >= 2 pages (page 0 is the "
+                             f"reserved null page), got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() serves low ids
+        self._used: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list | None:
+        """n distinct pages, or None — never a partial allocation."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"freeing page {p} that is not allocated "
+                                 f"(double free or null page)")
+            self._used.discard(p)
+            self._free.append(p)
+
+
+def init_pool(cfg: ModelConfig, ctx: ShardCtx, n_pages: int,
+              page_size: int):
+    """Zeroed physical page pool, dense-family layout (see module doc)."""
+    assert supports_paged(cfg), cfg.name
+    dims = lm.ArchDims.build(cfg, ctx)
+    kvl = dims.kv_pad // ctx.tp
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shape = (cfg.n_layers, n_pages, kvl, page_size, cfg.hd)
+    return {"layers": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
+
+
+def pool_specs(ctx: ShardCtx):
+    """PartitionSpec tree matching ``init_pool``: kv heads over 'model',
+    the page axis replicated (pages are slot-agnostic, any sequence's
+    next page can land anywhere in the pool)."""
+    kv = P(None, None, ctx.model_axis, None, None)
+    return {"layers": {"k": kv, "v": kv}}
+
+
+def write_prompt(pool, prefill_cache, pages):
+    """Scatter a single-sequence prefill KV cache into freshly-allocated
+    pages.  pool leaf: (L, P, kvl, ps, hd); prefill leaf: (L, 1, kvl, t,
+    hd) with t <= len(pages) * ps; pages: (nb,) page ids in logical-block
+    order.  The tail of the last page stays zero (masked as invalid)."""
+    def leaf(pl, kv):
+        n_layers, _, kvl, ps, hd = pl.shape
+        t = kv.shape[3]
+        nb = pages.shape[0]
+        kv = jnp.pad(kv[:, 0], ((0, 0), (0, 0), (0, nb * ps - t), (0, 0)))
+        tiles = kv.reshape(n_layers, kvl, nb, ps, hd).transpose(0, 2, 1, 3, 4)
+        return pl.at[:, pages].set(tiles.astype(pl.dtype))
+    return jax.tree.map(leaf, pool, prefill_cache)

@@ -1,0 +1,74 @@
+"""Parameter resolution + checkpoint hot-swap for the serving tier.
+
+``resolve_params`` is the single "where do serving weights come from"
+decision (shared by ServeSession and ServeEngine): the spec's checkpoint
+directory when ``ckpt.dir`` + ``ckpt.resume`` are set, else a fresh
+seeded init.  ``ParamReloader`` polls the same directory for a NEWER
+step between decode steps so a live engine picks up a concurrently
+training run's checkpoints without a restart — the swap is atomic from
+the model's point of view because it happens on the host between jitted
+decode calls (a step runs entirely on the old or entirely on the new
+params, never a mix).
+
+repro.api is imported function-locally: api.spec imports
+serving.config, so a module-level import here would cycle.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..checkpoint.ckpt import latest_step, load_checkpoint
+from ..models import lm
+
+
+def load_params(spec, cfg, mesh, step: int):
+    """Params of checkpoint ``step`` placed with spec's sharding.
+    load_checkpoint only reads the template's structure and dtypes — an
+    eval_shape template skips materializing a throwaway init."""
+    from ..api import build
+    ctx = spec.mesh.ctx()
+    template = jax.eval_shape(
+        lambda: lm.init_params(cfg, ctx, jax.random.PRNGKey(0)))
+    p_specs, _ = build.param_specs(spec, cfg)
+    tree, _ = load_checkpoint(spec.ckpt.dir, step, {"params": template},
+                              mesh=mesh, specs={"params": p_specs})
+    return tree["params"]
+
+
+def resolve_params(spec, cfg, mesh):
+    """(params, checkpoint_step | None): newest checkpoint when the spec
+    asks to resume from one, else a fresh seeded init."""
+    c = spec.ckpt
+    step = latest_step(c.dir) if (c.dir and c.resume) else None
+    if step is None:
+        return lm.init_params(cfg, spec.mesh.ctx(),
+                              jax.random.PRNGKey(spec.seed)), None
+    print(f"serving params from checkpoint step {step}", flush=True)
+    return load_params(spec, cfg, mesh, step), step
+
+
+class ParamReloader:
+    """Hot-swap poller over ``spec.ckpt.dir``.
+
+    ``poll()`` returns (params, step) when a checkpoint newer than
+    ``current_step`` has appeared (None while nothing changed); partial
+    writes are invisible because ``save_checkpoint`` os.replace()'s the
+    step directory atomically and ``latest_step`` skips anything without
+    a readable manifest.
+    """
+
+    def __init__(self, spec, cfg, mesh, current_step=None):
+        if not spec.ckpt.dir:
+            raise ValueError("ParamReloader needs spec.ckpt.dir")
+        self.spec = spec
+        self.cfg = cfg
+        self.mesh = mesh
+        self.current_step = -1 if current_step is None else current_step
+
+    def poll(self):
+        step = latest_step(self.spec.ckpt.dir)
+        if step is None or step <= self.current_step:
+            return None
+        params = load_params(self.spec, self.cfg, self.mesh, step)
+        self.current_step = step
+        return params, step

@@ -1,0 +1,187 @@
+"""repro.serving.kv_pool: allocator invariants, pool layout, and
+paged-vs-contiguous cache-content equality (the paged pool must hold
+exactly the bytes the contiguous decode cache would)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (ShardCtx, paged_gather, paged_update_cache,
+                                 update_cache)
+from repro.serving import (NULL_PAGE, PageAllocator, ServeConfig, init_pool,
+                           pool_specs, supports_paged, write_prompt)
+
+# --------------------------------------------------------------- allocator
+
+
+def test_allocator_never_hands_out_null_page():
+    a = PageAllocator(16)
+    got = a.alloc(15)
+    assert got is not None and len(got) == 15
+    assert NULL_PAGE not in got
+    assert len(set(got)) == 15
+    assert a.free_pages == 0
+
+
+def test_allocator_exhaustion_is_all_or_nothing():
+    a = PageAllocator(8)           # 7 usable pages
+    assert a.alloc(4) is not None
+    before = a.free_pages
+    assert a.alloc(5) is None      # too big: must NOT leak a partial grab
+    assert a.free_pages == before == 3
+    assert a.alloc(3) is not None
+
+
+def test_allocator_free_then_reuse():
+    a = PageAllocator(4)
+    first = a.alloc(3)
+    assert a.alloc(1) is None
+    a.free(first[:2])
+    second = a.alloc(2)
+    assert second is not None and set(second) == set(first[:2])
+
+
+def test_allocator_double_free_raises():
+    a = PageAllocator(4)
+    got = a.alloc(2)
+    a.free(got)
+    with pytest.raises(ValueError, match="not allocated"):
+        a.free(got)
+    with pytest.raises(ValueError, match="not allocated"):
+        a.free([NULL_PAGE])
+    with pytest.raises(ValueError, match="null page"):
+        PageAllocator(1)
+
+
+def test_scheduler_preemption_requeues_at_front():
+    from repro.serving import Scheduler
+    cfg = ServeConfig(page_size=4, max_active=2, max_seq=16, pages=6)
+    sched = Scheduler(cfg, PageAllocator(cfg.auto_pages()))
+    r0 = sched.submit([1] * 8, 4)   # 2 pages
+    r1 = sched.submit([2] * 8, 4)   # 2 pages -> 1 of 5 usable pages left
+    admitted = sched.admit()
+    assert [s.req.rid for s in admitted] == [r0, r1]
+    # r1 (youngest) gets evicted when someone must grow
+    victim = sched.preempt_youngest()
+    assert victim.req.rid == r1 and sched.n_preempted == 1
+    assert sched.queue[0].rid == r1          # front of the queue
+    assert sched.alloc.free_pages == 3       # its pages came back
+    # generated tokens survive preemption: re-admission prefills them too
+    victim.req.generated.extend([7, 8])
+    (readmitted,) = sched.admit()
+    assert readmitted.req.rid == r1
+    assert readmitted.length == 10           # prompt 8 + generated 2
+
+
+def test_scheduler_rejects_oversized_and_overflowing():
+    from repro.serving import QueueFull, Scheduler
+    cfg = ServeConfig(page_size=4, max_active=1, max_seq=8, max_queue=2)
+    sched = Scheduler(cfg, PageAllocator(cfg.auto_pages()))
+    with pytest.raises(ValueError, match="capacity"):
+        sched.submit([1] * 8, 4)    # 8 + 4 > capacity 8
+    with pytest.raises(ValueError, match="empty"):
+        sched.submit([], 4)
+    sched.submit([1, 2], 2)
+    sched.submit([1, 2], 2)
+    with pytest.raises(QueueFull):
+        sched.submit([1, 2], 2)
+
+
+# ------------------------------------------------------------ pool layout
+def _cfg(arch="minitron_4b"):
+    from repro import configs
+    return configs.get_smoke(arch)
+
+
+def test_pool_shapes_and_specs_align():
+    cfg = _cfg()
+    ctx = ShardCtx()
+    pool = init_pool(cfg, ctx, n_pages=6, page_size=4)
+    k = pool["layers"]["k"]
+    assert k.shape[0] == cfg.n_layers and k.shape[1] == 6
+    assert k.shape[3] == 4 and k.shape[4] == cfg.hd
+    specs = pool_specs(ctx)
+    assert jax.tree.structure(specs) == jax.tree.structure(pool)
+    assert supports_paged(cfg)
+    assert not supports_paged(_cfg("zamba2_7b"))
+    assert not supports_paged(_cfg("whisper_tiny"))
+    assert not supports_paged(_cfg("phi35_moe_42b"))
+
+
+# ----------------------------------------- paged == contiguous, bit for bit
+def test_write_prompt_matches_contiguous_prefix():
+    cfg = _cfg()
+    ctx = ShardCtx()
+    ps, t = 4, 10
+    rng = np.random.default_rng(0)
+    kvl = 2
+    pre = {"layers": {
+        "k": jnp.asarray(rng.normal(size=(cfg.n_layers, 1, kvl, t, cfg.hd)),
+                         jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(cfg.n_layers, 1, kvl, t, cfg.hd)),
+                         jnp.float32)}}
+    pool = {"layers": {
+        "k": jnp.zeros((cfg.n_layers, 8, kvl, ps, cfg.hd), jnp.float32),
+        "v": jnp.zeros((cfg.n_layers, 8, kvl, ps, cfg.hd), jnp.float32)}}
+    pages = jnp.asarray([3, 5, 1], jnp.int32)   # deliberately out of order
+    pool = write_prompt(pool, pre, pages)
+    for leaf in ("k", "v"):
+        # gather layer 0's pages back as one contiguous view
+        got = paged_gather(pool["layers"][leaf][0], jnp.asarray([[3, 5, 1]]))
+        np.testing.assert_array_equal(np.asarray(got[0, :, :t]),
+                                      np.asarray(pre["layers"][leaf][0, 0]))
+        # the tail of the last page stays zero (masked as invalid)
+        assert np.all(np.asarray(got[0, :, t:]) == 0)
+        # the null page was never written
+        assert np.all(np.asarray(pool["layers"][leaf][:, NULL_PAGE]) == 0)
+
+
+def test_paged_decode_write_matches_update_cache():
+    """One decode step's K written through the paged path equals the
+    contiguous update_cache write, gathered back in sequence order."""
+    ctx = ShardCtx()
+    rng = np.random.default_rng(1)
+    b, kvl, ps, hd, nb = 3, 2, 4, 8, 3
+    lengths = np.asarray([5, 0, 9])             # mid-page, start, last slot
+    new = jnp.asarray(rng.normal(size=(b, kvl, 1, hd)), jnp.float32)
+    # contiguous reference: each row written at its own position
+    contig = jnp.zeros((b, kvl, nb * ps, hd), jnp.float32)
+    refs = [update_cache(contig[i:i + 1], new[i:i + 1], int(lengths[i]), ctx)
+            for i in range(b)]
+    # paged: per-row page table, one shared physical pool
+    pool = jnp.zeros((1 + b * nb, kvl, ps, hd), jnp.float32)
+    table = np.arange(1, 1 + b * nb, dtype=np.int32).reshape(b, nb)
+    page_ids = jnp.asarray(
+        [table[i, lengths[i] // ps] for i in range(b)], jnp.int32)
+    pool = paged_update_cache(pool, new, page_ids,
+                              jnp.asarray(lengths % ps, jnp.int32))
+    got = paged_gather(pool, jnp.asarray(table))
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(refs[i][0]))
+
+
+def test_decode_attention_vector_positions_match_scalar():
+    """decode_attention with per-slot (b,) position counts equals running
+    each row separately with its scalar position — the property the
+    packed continuous batch relies on."""
+    from repro.models.layers import decode_attention
+    ctx = ShardCtx()
+    rng = np.random.default_rng(2)
+    b, h, hkv, s, hd = 4, 4, 2, 12, 8
+    q = jnp.asarray(rng.normal(size=(b, h, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), jnp.float32)
+    pos = np.asarray([3, 12, 1, 7])
+    batched = decode_attention(ctx, q, k, v, jnp.asarray(pos))
+    for i in range(b):
+        single = decode_attention(ctx, q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                  int(pos[i]))
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(single[0]))
+    # stale garbage beyond a row's length contributes exactly nothing
+    k_dirty = k.at[0, :, 3:].set(1e4)
+    v_dirty = v.at[0, :, 3:].set(-1e4)
+    dirty = decode_attention(ctx, q, k_dirty, v_dirty, jnp.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(dirty[0]),
+                                  np.asarray(batched[0]))

@@ -1,0 +1,175 @@
+"""repro.serving end-to-end: ServeConfig threading through RunSpec,
+engine-vs-session greedy parity under staggered arrivals, preemption
+resume, checkpoint hot-swap, and the prefill-seeded generate path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointConfig, RunSpec, ServeConfig, ServeSession,
+                       SpecError)
+from repro.checkpoint.ckpt import save_checkpoint
+from repro.models import lm
+from repro.serving.engine import ServeEngine
+
+from test_api import tiny_spec
+
+
+def serve_spec(**serve_kw):
+    kw = dict(page_size=4, max_active=8, max_seq=32, max_queue=32)
+    kw.update(serve_kw)
+    return dataclasses.replace(tiny_spec(), serve=ServeConfig(**kw))
+
+
+def _prompts(n, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, (int(rng.integers(3, 11)),)).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------- config
+def test_serve_config_roundtrips_through_runspec():
+    spec = serve_spec(temperature=0.7, top_k=5, reload_every=3,
+                      stop_token=2)
+    spec = dataclasses.replace(
+        spec, ckpt=CheckpointConfig(dir="/tmp/x"))
+    again = RunSpec.from_json(spec.to_json())
+    assert again == spec and again.serve.top_k == 5
+    assert again.serve.max_blocks == 8 and again.serve.capacity == 32
+
+
+def test_serve_cli_overlay():
+    spec = RunSpec.from_args(
+        ["--arch", "minitron_4b", "--smoke-config", "--page-size", "8",
+         "--max-active", "4", "--max-seq", "64", "--temperature", "0.5",
+         "--top-k", "3", "--serve-pages", "9", "--max-new-tokens", "12"])
+    s = spec.serve
+    assert (s.page_size, s.max_active, s.max_seq) == (8, 4, 64)
+    assert (s.temperature, s.top_k, s.pages, s.max_new_tokens) \
+        == (0.5, 3, 9, 12)
+
+
+def test_serve_config_validation():
+    with pytest.raises(SpecError, match="max_seq"):
+        serve_spec(max_seq=2, page_size=4).validate()
+    with pytest.raises(SpecError, match="top-k"):
+        serve_spec(top_k=3, temperature=0.0).validate()
+    with pytest.raises(SpecError, match="reload-every"):
+        serve_spec(reload_every=2).validate()
+    with pytest.raises(ValueError, match="page_size"):
+        ServeConfig(page_size=0)
+    with pytest.raises(ValueError, match="temperature"):
+        ServeConfig(temperature=-1.0)
+
+
+def test_engine_rejects_unpaged_and_dp_meshes():
+    from repro.api import MeshSpec
+    with pytest.raises(NotImplementedError, match="1xTP"):
+        ServeEngine(dataclasses.replace(
+            serve_spec(), mesh=MeshSpec(dp=2),
+            data=dataclasses.replace(tiny_spec().data, global_batch=4)))
+
+
+# ------------------------------------------------- engine/session parity
+def test_engine_matches_session_under_staggered_load():
+    """>= 8 concurrent sequences, staggered arrival and completion: every
+    request's greedy tokens equal the single-sequence ServeSession path
+    bit for bit (prefill==decode parity + null-page masking)."""
+    spec = serve_spec()
+    sess = ServeSession(spec)
+    eng = sess.engine()
+    prompts = _prompts(10, sess.cfg.vocab)
+    budgets = [4 + (i % 5) * 2 for i in range(10)]
+
+    # staggered arrival: half up front, the rest one per step
+    rids = [eng.submit(p, b) for p, b in zip(prompts[:5], budgets[:5])]
+    pending = list(zip(prompts[5:], budgets[5:]))
+    while eng.has_work() or pending:
+        if pending:
+            p, b = pending.pop(0)
+            rids.append(eng.submit(p, b))
+        eng.step()
+    assert eng.max_observed_active == 8, eng.max_observed_active
+    assert sorted(eng.results) == sorted(rids)
+    for rid, p, b in zip(rids, prompts, budgets):
+        ref = np.asarray(sess.generate(np.asarray([p]), gen_len=b,
+                                       max_seq=32))[0]
+        got = np.asarray(eng.results[rid])
+        np.testing.assert_array_equal(got, ref, err_msg=f"rid {rid}")
+
+
+def test_engine_preemption_resumes_exactly():
+    """A pool too small for every admitted sequence forces preemption;
+    evicted requests re-prefill (prompt + generated so far) and still
+    finish with the exact greedy continuation."""
+    spec = serve_spec(max_active=4, pages=9)  # 8 usable pages, 4 slots
+    sess = ServeSession(spec)
+    eng = sess.engine()
+    prompts = _prompts(4, sess.cfg.vocab, seed=1)
+    rids = [eng.submit(p, 8) for p in prompts]
+    while eng.has_work():
+        eng.step()
+    assert eng.sched.n_preempted > 0
+    for rid, p in zip(rids, prompts):
+        ref = np.asarray(sess.generate(np.asarray([p]), gen_len=8,
+                                       max_seq=32))[0]
+        np.testing.assert_array_equal(np.asarray(eng.results[rid]), ref)
+
+
+def test_engine_stop_token_and_sampling():
+    spec = serve_spec(temperature=0.8, top_k=4)
+    eng = ServeEngine(spec)
+    out = eng.serve(_prompts(3, eng.cfg.vocab), max_new_tokens=6)
+    assert all(len(v) == 6 for v in out.values())
+    assert all((np.asarray(v) < eng.cfg.vocab).all() for v in out.values())
+    # stop token ends a sequence before its budget
+    spec2 = serve_spec(stop_token=0)
+    eng2 = ServeEngine(spec2, params=eng.params)
+    out2 = eng2.serve(_prompts(3, eng2.cfg.vocab), max_new_tokens=12)
+    for v in out2.values():
+        v = list(v)
+        assert 0 not in v[:-1] and len(v) <= 12
+
+
+# ------------------------------------------------------------- hot-swap
+def test_hot_swap_picks_up_newer_checkpoint_mid_serve(tmp_path):
+    spec = dataclasses.replace(
+        serve_spec(reload_every=1),
+        ckpt=CheckpointConfig(dir=str(tmp_path), resume=True))
+    cfg = spec.model_config()
+    ctx = spec.mesh.ctx()
+    p0 = lm.init_params(cfg, ctx, jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 1, p0)
+
+    eng = ServeEngine(spec)
+    assert eng.params_step == 1
+    prompts = _prompts(2, cfg.vocab, seed=2)
+    rid0 = eng.submit(prompts[0], 10)
+    for _ in range(3):
+        eng.step()
+    # a concurrent trainer writes a newer checkpoint mid-serve
+    p1 = jax.tree.map(lambda a: a * 1.5, p0)
+    save_checkpoint(tmp_path, 7, p1)
+    rid1 = eng.submit(prompts[1], 6)
+    while eng.has_work():
+        eng.step()
+    assert eng.params_step == 7          # swapped without a restart
+    assert len(eng.results[rid0]) == 10 and len(eng.results[rid1]) == 6
+    # a request admitted after the swap decodes with the NEW params
+    sess_new = ServeSession(spec, params=p1)
+    ref = np.asarray(sess_new.generate(np.asarray([prompts[1]]), gen_len=6,
+                                       max_seq=32))[0]
+    np.testing.assert_array_equal(np.asarray(eng.results[rid1]), ref)
+
+
+# ------------------------------------- prefill-seeded generate (session)
+def test_generate_prefill_path_matches_replay():
+    """ServeSession.generate's compiled-prefill path is bit-exact with the
+    token-by-token decode replay it replaced (greedy)."""
+    sess = ServeSession(tiny_spec())
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, sess.cfg.vocab, (3, 7))
+    fast = np.asarray(sess.generate(prompts, gen_len=6, max_seq=24))
+    slow = np.asarray(sess._generate_replay(prompts, gen_len=6, max_seq=24))
+    np.testing.assert_array_equal(fast, slow)
