@@ -11,13 +11,21 @@ Two measurements:
              paper-LLaMA train step on an N-device mesh, for every
              registered sync mode (this framework's programs, not
              formulas). cascade runs on a (pod=2, data=N/2) mesh.
+
+Next to each bytes column sits the TIME column (backend.time_on_wire,
+EXPERIMENTS.md §Overlap): per-device wire/fabric-occupancy seconds —
+line-rate transfer plus per-bucket MZI reconfiguration — with an
+overlap=off and an overlap=on row each, so the figure shows what the
+streaming engine buys on top of the byte reduction.  The measured rows
+feed the REAL paper-LLaMA gradient size (from the compiled HLO run) into
+the same model.  All rows mirror to ``results/bench/fig6.json``.
 """
 from __future__ import annotations
 
 import json
 import sys
 
-from .common import emit, run_subprocess
+from .common import emit, flush_json, run_subprocess
 
 sys.path.insert(0, "src")
 
@@ -77,13 +85,41 @@ def analytic(n: int, bits: int = 8) -> dict:
     return out
 
 
+def wire_time(nbytes: float, n: int, mode: str, overlap: bool,
+              bits: int = 8, bucket_bytes: int = BUCKET_BYTES) -> float:
+    """backend.time_on_wire with fig6's (pod=2, data=n/2) cascade split."""
+    kw = {"n1": max(n // 2, 1)} if mode == "cascade" else {}
+    return get_backend(mode).time_on_wire(
+        nbytes, n, bits, overlap=overlap, bucket_bytes=bucket_bytes, **kw)
+
+
+def emit_time_rows(prefix: str, nbytes: float, n: int):
+    """One time-on-wire row per (mode, overlap) next to the bytes rows."""
+    for mode in MODES:
+        t_off = wire_time(nbytes, n, mode, overlap=False)
+        t_on = wire_time(nbytes, n, mode, overlap=True)
+        emit(f"{prefix}.N{n}.{mode}.overlap_off", 0.0,
+             f"time_on_wire_us={t_off * 1e6:.1f}")
+        emit(f"{prefix}.N{n}.{mode}.overlap_on", 0.0,
+             f"time_on_wire_us={t_on * 1e6:.1f} "
+             f"wire_ratio={t_on / t_off:.3f}")
+
+
 def main(full: bool = False):
+    try:
+        _run(full)
+    finally:
+        flush_json("fig6")
+
+
+def _run(full: bool):
     for n in (4, 8, 16):
         units = analytic(n)
         ring = units["ring"]
         emit(f"fig6.analytic.N{n}", 0.0,
              " ".join(f"{m}={units[m]:.3f}" for m in MODES)
              + f" overhead_vs_optinc={(ring - units['optinc']) / ring:.3f}")
+        emit_time_rows("fig6.analytic_time", 2.0 * 1_000_000, n)
     for n in ((4, 8, 16) if full else (8,)):
         stdout = run_subprocess(
             MEASURE.format(n=n, modes=repr(MODES),
@@ -99,6 +135,9 @@ def main(full: bool = False):
                  f"norm_vs_bf16_grads={rb / gb:.3f} "
                  f"reduce_scatter_launches={n_rs} "
                  f"bucket_budget={rec['bucket_budget']}")
+        # time column for the REAL paper-LLaMA gradient size (same model,
+        # measured payload): one off/on row pair per mode
+        emit_time_rows("fig6.measured_time", float(gb), n)
 
 
 if __name__ == "__main__":

@@ -201,6 +201,20 @@ def _run(full: bool, smoke: bool):
                      f"emulator_overhead_ratio="
                      f"{total / total_behavioral:.3f} "
                      f"latency_reduction={1 - total / total_ring:.3f}")
+            # streaming-engine wire model (EXPERIMENTS.md §Overlap): the
+            # optinc fabric-occupancy seconds per step with and without
+            # backward/comm overlap — reconfiguration pipelining on top
+            # of the byte reduction the rows above already price in
+            from repro.collectives import get_backend
+            nb_bf16 = gbytes / 2.0       # MODELS gbytes are f32 bytes
+            t_off = get_backend("optinc").time_on_wire(
+                nb_bf16, n, 8, overlap=False)
+            t_on = get_backend("optinc").time_on_wire(
+                nb_bf16, n, 8, overlap=True)
+            emit(f"fig7b.{hw}.{name}.overlap", t_on * 1e6,
+                 f"time_on_wire_off_us={t_off * 1e6:.1f} "
+                 f"time_on_wire_on_us={t_on * 1e6:.1f} "
+                 f"wire_ratio={t_on / t_off:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""Streaming-engine benchmark: backward/comm overlap on vs off.
+
+Runs the acceptance scenario end-to-end twice in one subprocess — the
+paper-LLaMA smoke config, ``--sync cascade`` on a (pod=2, data=2) mesh,
+3 steps — with the barrier engine and with ``--overlap``, and emits one
+row per variant:
+
+  us_per_call       measured steady-state step wall time (min over the
+                    post-compile steps; CPU CI has no optical fabric, so
+                    wall time mostly shows the two dispatch strategies
+                    compile/run comparably)
+  time_on_wire_us   the analytic fabric-occupancy model for the SAME spec
+                    (backend.time_on_wire via api.build.modeled_time_on_wire)
+  wire_ratio        on/off modeled wire time — the perf gate holds this
+                    <= 1.0 (streaming must never cost wire time)
+  losses_match      1 iff the two runs' per-step losses are identical —
+                    the gate holds the streaming engine to bit-identical
+                    numerics, not just similar convergence
+
+Rows mirror to results/bench/overlap.json; the committed
+results/bench/overlap_baseline.json is the regression reference
+(scripts/check_perf_regression.py, section ``overlap``).
+
+    PYTHONPATH=src python -m benchmarks.overlap [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .common import emit, flush_json, run_subprocess
+
+sys.path.insert(0, "src")
+
+BUCKET_MB = 4        # the engine default: 41 buckets for the 43M model
+
+RUN = """
+import json, io, contextlib
+import repro.launch.train as T
+out = {{}}
+for label, extra in (("off", []), ("on", ["--overlap"])):
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        T.main(["--arch", "paper_llama", "--smoke-config", "--sync",
+                "cascade", "--mesh", "2x1", "--steps", "{steps}",
+                "--global-batch", "8", "--seq-len", "128",
+                "--bucket-mb", "{bucket_mb}"] + extra)
+    recs = [json.loads(l) for l in buf.getvalue().splitlines()
+            if l.startswith("{{")]
+    out[label] = {{"losses": [r["loss"] for r in recs],
+                   "step_s": [r["time_s"] for r in recs]}}
+print(json.dumps(out))
+"""
+
+
+def modeled_wire_us(overlap: bool, bucket_mb: float) -> float:
+    from repro.api import MeshSpec, RunSpec, SyncConfig, build
+    spec = RunSpec(arch="paper_llama", smoke=True,
+                   mesh=MeshSpec(pods=2, dp=2, tp=1),
+                   sync=SyncConfig(mode="cascade", bits=8,
+                                   bucket_bytes=int(bucket_mb * 2 ** 20)))
+    return build.modeled_time_on_wire(spec, overlap=overlap) * 1e6
+
+
+def main(full: bool = False, smoke: bool = False):
+    try:
+        _run(full=full, smoke=smoke)
+    finally:
+        flush_json("overlap")
+
+
+def _run(full: bool, smoke: bool):
+    steps = 5 if full else 3
+    out = json.loads(run_subprocess(
+        RUN.format(steps=steps, bucket_mb=BUCKET_MB),
+        devices=4, timeout=3000).strip().splitlines()[-1])
+    match = int(out["off"]["losses"] == out["on"]["losses"]
+                and len(out["off"]["losses"]) == steps)
+    t_off = modeled_wire_us(False, BUCKET_MB)
+    t_on = modeled_wire_us(True, BUCKET_MB)
+    # step 0 pays the jit compile; steady state = min of the rest
+    wall = {k: min(v["step_s"][1:] or v["step_s"]) * 1e6
+            for k, v in out.items()}
+    emit("overlap.cascade.off", wall["off"],
+         f"time_on_wire_us={t_off:.1f} steps={steps}")
+    emit("overlap.cascade.on", wall["on"],
+         f"time_on_wire_us={t_on:.1f} wire_ratio={t_on / t_off:.3f} "
+         f"losses_match={match} steps={steps}")
+    if not match:
+        raise RuntimeError(
+            f"overlap-on losses diverged from overlap-off: "
+            f"{out['on']['losses']} vs {out['off']['losses']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI-invocation symmetry (the run is "
+                         "already the smoke scenario)")
+    args = ap.parse_args()
+    main(full=args.full, smoke=args.smoke)

@@ -12,8 +12,8 @@ import argparse
 import sys
 import traceback
 
-from . import (common, fig6, fig7a, fig7b, mesh_emulation, roofline_table,
-               serve_throughput, table1, table2, trained_onn)
+from . import (common, fig6, fig7a, fig7b, mesh_emulation, overlap,
+               roofline_table, serve_throughput, table1, table2, trained_onn)
 
 SECTIONS = {
     "table1": table1.main,
@@ -25,6 +25,7 @@ SECTIONS = {
     "trained_onn": trained_onn.main,
     "roofline": roofline_table.main,
     "serve_throughput": serve_throughput.main,
+    "overlap": overlap.main,
 }
 
 

@@ -14,11 +14,16 @@ just happened, e.g. the CI benchmarks-smoke job) against the committed
 * fig7b mesh rows carry ``emulator_overhead_ratio=`` in their derived
   field — the mesh-vs-behavioral step-time ratio.  Fresh ratios must stay
   under ``--ratio-cap`` (the tentpole's <= ~2x bar, with tolerance
-  headroom) for the noise-free mesh rows.
+  headroom) for the noise-free mesh rows;
+* overlap rows (benchmarks.overlap) are held to the streaming engine's
+  two invariants regardless of CI wall-clock noise: ``wire_ratio=``
+  (overlap-on / overlap-off modeled time_on_wire) must stay <= 1.0, and
+  ``losses_match=`` must stay 1 — streaming may never cost wire time or
+  perturb numerics.
 
   PYTHONPATH=src python scripts/check_perf_regression.py \
-      [--sections mesh_emulation,fig7b,serve_throughput] [--tol 4.0] \
-      [--ratio-cap 2.0]
+      [--sections mesh_emulation,fig7b,serve_throughput,overlap] \
+      [--tol 4.0] [--ratio-cap 2.0]
 
 Refresh a baseline by re-running the benchmark on a quiet machine and
 copying ``results/bench/<section>.json`` over the ``_baseline`` file.
@@ -41,6 +46,9 @@ BENCH = _ROOT / "results" / "bench"
 # compute term, so their ratios are compute-shape artifacts and stay
 # informational.
 RATIO_GATED = re.compile(r"^fig7b\.H100\.llama8L\.mesh$")
+
+# overlap rows: modeled-wire-time and numeric-identity invariants
+OVERLAP_GATED = re.compile(r"^overlap\.")
 
 
 def load_rows(path: pathlib.Path) -> dict:
@@ -81,6 +89,18 @@ def check_section(section: str, tol: float, ratio_cap: float) -> list:
                 errors.append(
                     f"{section}: {name} emulator_overhead_ratio={ratio:.2f} "
                     f"exceeds the {ratio_cap:g}x mesh-vs-behavioral cap")
+        if OVERLAP_GATED.match(name):
+            wr = derived_field(frow, "wire_ratio")
+            if wr is not None and wr > 1.0:
+                errors.append(
+                    f"{section}: {name} wire_ratio={wr:.3f} > 1.0 — "
+                    f"overlap-on modeled time_on_wire exceeds overlap-off")
+            lm = derived_field(frow, "losses_match")
+            if lm is not None and lm != 1:
+                errors.append(
+                    f"{section}: {name} losses_match={lm:g} — the "
+                    f"streaming engine's losses diverged from the barrier "
+                    f"path")
     return errors
 
 
@@ -89,7 +109,7 @@ def main() -> int:
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--sections",
-                    default="mesh_emulation,fig7b,serve_throughput",
+                    default="mesh_emulation,fig7b,serve_throughput,overlap",
                     help="comma-separated baseline sections to gate")
     ap.add_argument("--tol", type=float, default=4.0,
                     help="allowed fresh/baseline us_per_call ratio "

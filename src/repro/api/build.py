@@ -39,6 +39,26 @@ def warmup_photonics(spec: RunSpec):
     return module
 
 
+def modeled_time_on_wire(spec: RunSpec, cfg=None, overlap=None) -> float:
+    """Analytic per-step wire-occupancy seconds for spec's sync scenario
+    (backend ``time_on_wire``: line-rate transfer + per-bucket fabric
+    reconfiguration, pipelined when overlap is on).  ``overlap`` overrides
+    ``spec.sync.overlap``; pure arithmetic — no mesh or devices needed.
+    The benchmarks report this next to the measured step time so the
+    CPU-only perf gate can hold overlap-on to overlap-off without real
+    transceivers (EXPERIMENTS.md §Overlap)."""
+    from ..collectives import get_backend
+    cfg = cfg if cfg is not None else spec.model_config()
+    sync = spec.resolved_sync()
+    ov = sync.overlap if overlap is None else overlap
+    nbytes = 2 * cfg.param_count()          # bf16 gradient bytes
+    n = spec.mesh.pods * spec.mesh.dp
+    kw = {"n1": spec.mesh.dp} if sync.mode == "cascade" else {}
+    return get_backend(sync.mode).time_on_wire(
+        nbytes, n, sync.bits, overlap=ov,
+        bucket_bytes=sync.bucket_bytes, **kw)
+
+
 def build_train_step(spec: RunSpec, cfg=None, mesh=None):
     """(step_fn, in_specs, out_specs) for spec's training scenario.
     step(params, opt_state, sync_state, batch, key) — shard_map'd, not

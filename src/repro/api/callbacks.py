@@ -36,20 +36,35 @@ class Callback:
 
 class StragglerWatchdog(Callback):
     """Annotates records whose step time exceeds ``factor`` x the rolling
-    median (straggler detection; keep this BEFORE the logger)."""
+    median (straggler detection; keep this BEFORE the logger).
+
+    ``factor <= 0`` disables the watchdog entirely (``--watchdog 0``): no
+    timing history is kept and records are never annotated.  A step at or
+    under the threshold resets nothing — the rolling window keeps sliding,
+    so one straggler does not poison the median for later steps.
+    ``n_flagged`` counts the stragglers seen this run.
+    """
 
     def __init__(self, factor: float = 3.0, window: int = 50, warmup: int = 10):
         self.factor = factor
         self.window = window
         self.warmup = warmup
         self.times = []
+        self.n_flagged = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.factor > 0
 
     def on_step_end(self, session, record):
+        if not self.enabled:
+            return
         dt = record.get("time_s", 0.0)
         self.times.append(dt)
         med = statistics.median(self.times[-self.window:])
         if len(self.times) > self.warmup and dt > self.factor * med:
             record["straggler"] = True
+            self.n_flagged += 1
 
 
 class JsonlLogger(Callback):

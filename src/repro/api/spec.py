@@ -287,6 +287,10 @@ class RunSpec:
                         help="pod (level-2) axis size; 0 = auto (2 for "
                              "--sync cascade, else 1)")
         ap.add_argument("--bits", type=int, help="OptINC bit width B")
+        ap.add_argument("--overlap", action="store_true",
+                        help="stream buckets in gradient-readiness order so "
+                             "collectives overlap the remaining backward "
+                             "(bit-exact vs the barrier path)")
         ap.add_argument("--fidelity", choices=FIDELITIES,
                         help="optinc/cascade emulation depth: behavioral "
                              "Q(mean) | trained dense ONN | MZI mesh "
@@ -387,6 +391,8 @@ class RunSpec:
             sync_kw["mode"] = ns.pop("sync")
         if "bits" in ns:
             sync_kw["bits"] = ns.pop("bits")
+        if "overlap" in ns:
+            sync_kw["overlap"] = ns.pop("overlap")
         ph_kw = {}
         if "fidelity" in ns:
             ph_kw["fidelity"] = ns.pop("fidelity")

@@ -1,8 +1,11 @@
 """Collective backends: psum | ring | optinc | cascade.
 
 Each backend synchronizes ONE fused f32 bucket inside shard_map (see
-bucketizer.py) and models its own wire bytes for the benchmarks
-(EXPERIMENTS.md §Fig6).  ``cascade`` is the paper's III-C two-level
+bucketizer.py) and models its own wire bytes (``bytes_on_wire``,
+EXPERIMENTS.md §Fig6) and wire TIME (``time_on_wire``, EXPERIMENTS.md
+§Overlap: transfer at the transceiver line rate plus the per-bucket
+circuit-reconfiguration latencies, with/without the streaming engine's
+reconfiguration/transfer pipelining).  ``cascade`` is the paper's III-C two-level
 carry-cascade (eq. 8-10) made a first-class runtime mode: level-1 OptINCs
 reduce over the innermost sync axis and emit the average at resolution
 1/N1 — carried losslessly as the integer partial sum, the ICI analogue of
@@ -24,9 +27,36 @@ from ..photonics import pipeline as ph_pipeline
 from ..photonics import runtime as ph_runtime
 from ..photonics.cascade import extra_symbols
 from ..photonics.encoding import QuantSpec, compute_scale
+from .bucketizer import DEFAULT_BUCKET_BYTES, expected_buckets
 from .registry import register_backend
 
 _F32_TINY = 1.1754944e-38  # jnp.finfo(jnp.float32).tiny
+
+# ------------------- time-on-wire model (EXPERIMENTS.md §Overlap) ----------
+#
+# ``time_on_wire(nbytes, n, bits, overlap)`` is the analytic sibling of
+# ``bytes_on_wire``: the per-device seconds the full gradient sync keeps
+# the wire (and, for the optical backends, the reconfigurable fabric)
+# busy.  Gradients move as ceil(2*nbytes / bucket_bytes) fused f32
+# buckets (nbytes is raw bf16 gradient bytes, so elems = nbytes/2 and
+# the fused f32 stream is 2*nbytes); each bucket of the optical backends
+# needs its MZI mesh(es) programmed for the reduction circuit before
+# symbols flow.  ``overlap=False`` models today's barrier engine —
+# reconfigure, transfer, reconfigure, transfer, strictly serial.
+# ``overlap=True`` models the streaming engine: the fabric reprograms
+# for bucket k+1 while bucket k's symbols are still in flight, and the
+# cascade's level-0 pod reduction of bucket k+1 pipelines against the
+# level-1 carry merge of bucket k, so after the pipeline fills only the
+# bottleneck stage is exposed per bucket.
+
+WIRE_BYTES_PER_S = 100e9     # one 800 Gb/s full-duplex optical transceiver
+MESH_RECONFIG_S = 20e-6      # programming one MZI mesh circuit (thermal
+                             # phase-shifter settle, SWOT-style reconfig)
+HOP_LATENCY_S = 1e-6         # one electrical ppermute round (ring baseline)
+
+
+def _n_buckets(nbytes: float, bucket_bytes: int) -> int:
+    return max(expected_buckets(int(max(nbytes, 1) * 2), bucket_bytes), 1)
 
 
 def _axis_size(axes) -> int:
@@ -84,6 +114,16 @@ class PsumBackend:
         # ring-equivalent all-reduce: RS + AG, (N-1)/N of the payload each
         return 2.0 * (n - 1) / max(n, 1) * nbytes
 
+    def time_on_wire(self, nbytes: float, n: int, bits: int,
+                     overlap: bool = False,
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> float:
+        # electrical all-reduce: no circuit to reconfigure, the wire stays
+        # saturated either way — streaming changes WHEN bytes move, not
+        # how many seconds they occupy the wire.  2(N-1) serial rounds
+        # each pay one hop latency.
+        return (self.bytes_on_wire(nbytes, n, bits) / WIRE_BYTES_PER_S
+                + 2.0 * (n - 1) * HOP_LATENCY_S)
+
 
 def _ring_allreduce_flat(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Manual ring all-reduce of one bucket over one mesh axis:
@@ -120,6 +160,8 @@ class RingBackend:
 
     def bytes_on_wire(self, nbytes: float, n: int, bits: int) -> float:
         return 2.0 * (n - 1) / max(n, 1) * nbytes
+
+    time_on_wire = PsumBackend.time_on_wire  # same electrical wire model
 
 
 def _quantized_sync(flat, cfg, key, scatter_plan):
@@ -287,6 +329,22 @@ class OptincBackend:
         # (receive is symmetric; send-direction accounting)
         return (nbytes / 2.0) * bits / 8.0
 
+    def time_on_wire(self, nbytes: float, n: int, bits: int,
+                     overlap: bool = False,
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> float:
+        # one reduction circuit per bucket: program the mesh, stream the
+        # B-bit codes through at line rate.  Streaming hides every
+        # reconfiguration after the first behind the previous bucket's
+        # in-flight transfer (the remainder is exposed when a bucket
+        # drains faster than the mesh settles).
+        t = self.bytes_on_wire(nbytes, n, bits) / WIRE_BYTES_PER_S
+        nb = _n_buckets(nbytes, bucket_bytes)
+        if not overlap:
+            return nb * MESH_RECONFIG_S + t
+        t_bucket = t / nb
+        return (MESH_RECONFIG_S + t
+                + max(0.0, MESH_RECONFIG_S - t_bucket) * (nb - 1))
+
 
 class CascadeBackend:
     """Two-level carry-cascade (paper III-C eq. 10) over >= 2 mesh axes.
@@ -342,6 +400,35 @@ class CascadeBackend:
         uplink = elems * bits / 8.0
         carry = elems * (bits + 2 * extra_symbols(n1)) / 8.0 / n1
         return uplink + carry
+
+    def time_on_wire(self, nbytes: float, n: int, bits: int,
+                     overlap: bool = False,
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                     n1: int | None = None) -> float:
+        # TWO reconfigurable circuits per bucket: the level-0 pod mesh
+        # (uplink reduction over n1 servers) and the level-1 carry mesh
+        # (cross-pod merge of the eq.-10 partial averages).  Serially
+        # (overlap off) every bucket pays program-0, transfer-0,
+        # program-1, transfer-1 back to back.  The streaming engine runs
+        # the two levels as a 2-stage pipeline — level 0 of bucket k+1
+        # reduces WHILE level 1 merges bucket k's carry — and each
+        # level's next reconfiguration hides behind its own in-flight
+        # transfer, so after the first bucket fills the pipe only the
+        # bottleneck stage (transfer or mesh settle, whichever is
+        # longer) is exposed per bucket.
+        if n1 is None:
+            n1 = max(int(round(n ** 0.5)), 1)
+        elems = nbytes / 2.0
+        t0 = elems * bits / 8.0 / WIRE_BYTES_PER_S
+        t1 = (elems * (bits + 2 * extra_symbols(n1)) / 8.0 / n1
+              / WIRE_BYTES_PER_S)
+        nb = _n_buckets(nbytes, bucket_bytes)
+        r = MESH_RECONFIG_S
+        if not overlap:
+            return nb * 2 * r + t0 + t1
+        fill = 2 * r + t0 / nb + t1 / nb      # first bucket through both
+        drain = max(max(t0 / nb, r), max(t1 / nb, r))
+        return fill + (nb - 1) * drain
 
 
 register_backend("psum", PsumBackend())

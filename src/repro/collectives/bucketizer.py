@@ -11,6 +11,16 @@ and the final bucket may be short.
 
 The layout is static (shapes/dtypes only), so it can be computed from
 ShapeDtypeStructs at trace time and reused across steps.
+
+For the streaming (backward/comm-overlap) engine the same layout also
+answers two structural questions without touching any array data:
+``bucket_segments`` / ``leaf_segments`` map each bucket to the leaf
+slices it fuses (and back), so a bucket's collective can be built from
+ONLY the leaves it spans — the dataflow dependency that lets the
+compiler launch bucket k's sync while the gradients of the leaves in
+bucket k-1 are still being differentiated — and ``launch_order`` turns
+per-leaf readiness ranks (backward emits leaf gradients in reverse tree
+order) into the bucket dispatch schedule.
 """
 from __future__ import annotations
 
@@ -54,6 +64,69 @@ def make_layout(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketLayou
         bounds = ()
     return BucketLayout(shapes=shapes, dtypes=dtypes, sizes=sizes,
                         total=total, bucket_elems=bucket_elems, bounds=bounds)
+
+
+def bucket_segments(layout: BucketLayout) -> tuple:
+    """Per-bucket leaf coverage: a tuple (one entry per bucket) of
+    ``(leaf_idx, start, stop)`` triples, where ``[start, stop)`` is the
+    LEAF-LOCAL flat slice that bucket fuses.  Together the triples of
+    bucket b tile exactly ``layout.bounds[b]`` of the concat space; a
+    zero-size leaf appears in no bucket.  Static — trace-time only."""
+    segs, offsets, off = [], [], 0
+    for sz in layout.sizes:
+        offsets.append(off)
+        off += sz
+    for s, e in layout.bounds:
+        cur = []
+        for i, (lo, sz) in enumerate(zip(offsets, layout.sizes)):
+            a, b = max(s, lo), min(e, lo + sz)
+            if a < b:
+                cur.append((i, a - lo, b - lo))
+        segs.append(tuple(cur))
+    return tuple(segs)
+
+
+def leaf_segments(layout: BucketLayout) -> tuple:
+    """The transpose of ``bucket_segments``: per-leaf tuple of
+    ``(bucket_idx, start, stop)`` triples in bucket order, where
+    ``[start, stop)`` is the BUCKET-LOCAL slice holding that part of the
+    leaf.  A zero-size leaf gets an empty tuple."""
+    per_leaf = [[] for _ in layout.sizes]
+    for b, seg in enumerate(bucket_segments(layout)):
+        s = layout.bounds[b][0]
+        off = 0
+        for i, a, t in seg:
+            per_leaf[i].append((b, off, off + (t - a)))
+            off += t - a
+        assert s + off == layout.bounds[b][1]
+    return tuple(tuple(p) for p in per_leaf)
+
+
+def launch_order(layout: BucketLayout, readiness=None) -> tuple:
+    """Bucket dispatch schedule for the streaming engine.
+
+    ``readiness`` is a per-leaf emission rank — the (relative) time at
+    which that leaf's gradient becomes available during backward; lower
+    = earlier.  Default: backward differentiates the network back to
+    front, so leaf gradients are emitted in REVERSE tree order
+    (``readiness[i] = n_leaves - 1 - i``).  A bucket is ready when its
+    LATEST leaf is (max over its segments); buckets are dispatched in
+    ready order, ties broken by DESCENDING bucket index (buckets
+    unblocked by the same leaf stream end-of-concat-space first, matching
+    the reverse-emission narrative), so under the default the schedule is
+    simply the reversed bucket index order.
+    """
+    if readiness is None:
+        n = len(layout.sizes)
+        readiness = tuple(n - 1 - i for i in range(n))
+    if len(readiness) != len(layout.sizes):
+        raise ValueError(
+            f"readiness must rank every leaf: got {len(readiness)} ranks "
+            f"for {len(layout.sizes)} leaves")
+    segs = bucket_segments(layout)
+    ready = [max((readiness[i] for i, _, _ in seg), default=0)
+             for seg in segs]
+    return tuple(sorted(range(len(segs)), key=lambda b: (ready[b], -b)))
 
 
 def flatten_concat(leaves) -> jnp.ndarray:

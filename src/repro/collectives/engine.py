@@ -11,6 +11,28 @@ vector aligned with the concatenated-leaf space: it is added to the
 fused gradient stream before quantization and replaced by the backend's
 per-bucket local quantization error, so residuals genuinely persist
 across steps (the train step threads this vector as explicit state).
+
+``SyncConfig.overlap`` selects between two dispatch strategies:
+
+* overlap off (default) — the historical barrier path: flatten-concat
+  the FULL gradient pytree, then one lax.scan over the stacked full-size
+  buckets (compile-once).  The concat makes every bucket's collective
+  depend on every leaf, so the fabric sees its first symbol only after
+  the whole backward finishes.  This path is kept byte-for-byte — its
+  jaxpr is regression-gated against a frozen reference.
+* overlap on — the streaming path (``_sync_streaming``): each bucket is
+  assembled from ONLY the leaves it spans (``bucket_segments``) and its
+  own residual slice, and buckets are dispatched in gradient-readiness
+  order (``launch_order``: backward emits leaf gradients in reverse tree
+  order, so the bucket covering the END of the concat space launches
+  first, while earlier layers are still differentiating).  Synced leaves
+  are likewise rebuilt from only their own buckets (``leaf_segments``) —
+  no all-bucket join on the output side either.  Per bucket the math,
+  the key (``split(key, n_buckets)[b]``), and the residual slice are
+  IDENTICAL to the barrier path, so overlap changes launch ordering and
+  dataflow dependencies, never numerics (bit-exactness is
+  regression-gated).  The cost: the scan's compile-once body is given up
+  for O(n_buckets) unrolled launches.
 """
 from __future__ import annotations
 
@@ -21,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..photonics.config import PhotonicsConfig
-from .bucketizer import (DEFAULT_BUCKET_BYTES, bucketize, flatten_concat,
+from .bucketizer import (DEFAULT_BUCKET_BYTES, bucket_segments, bucketize,
+                         flatten_concat, launch_order, leaf_segments,
                          make_layout, unbucketize)
 from .registry import get_backend
 
@@ -35,6 +58,9 @@ class SyncConfig:
     error_layers: tuple = ()         # Table II key, () = ideal ONN
     error_feedback: bool = False     # beyond-paper residual accumulation
     bucket_bytes: int = DEFAULT_BUCKET_BYTES  # fused-bucket wire payload
+    # stream buckets in gradient-readiness order so collectives overlap
+    # the remaining backward (module docstring; bit-exact vs overlap off)
+    overlap: bool = False
     # checkpoint the residual vectors block-sparsely (only blocks with a
     # nonzero carry are stored — pack_residuals/unpack_residuals), cutting
     # checkpoint size for mostly-exact backends; runtime state stays dense
@@ -104,8 +130,60 @@ def is_packed_residuals(tree) -> bool:
         for v in tree.values())
 
 
+def _sync_streaming(leaves, treedef, layout, backend, cfg: SyncConfig,
+                    key, residual, readiness):
+    """The overlap-on dispatch: per-bucket dataflow, readiness-ordered.
+
+    Bucket b's input is concatenated from the slices of ONLY the leaves
+    it spans (plus its own residual slice), so its collective launch
+    depends on nothing emitted after those gradients; synced leaves are
+    rebuilt from only the buckets covering them.  Dispatch follows
+    ``launch_order`` — with the default reverse-emission readiness the
+    LAST bucket (deepest layers, first gradients out of backward) goes
+    on the wire first.  Every per-bucket quantity (key, residual slice,
+    backend math) matches the barrier path bit-for-bit; only the trace
+    order and the dependency structure differ.
+    """
+    segs = bucket_segments(layout)
+    order = launch_order(layout, readiness)
+    nb = layout.n_buckets
+    keys = (jax.random.split(key, nb) if key is not None else [None] * nb)
+    flats = {}
+
+    def leaf_flat(i):
+        if i not in flats:
+            flats[i] = jnp.reshape(leaves[i], (-1,)).astype(jnp.float32)
+        return flats[i]
+
+    outs, errs = [None] * nb, [None] * nb
+    for b in order:
+        parts = [leaf_flat(i)[a:t] if (a, t) != (0, layout.sizes[i])
+                 else leaf_flat(i) for i, a, t in segs[b]]
+        bucket = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if cfg.error_feedback and residual is not None:
+            s, e = layout.bounds[b]
+            bucket = bucket + residual[s:e].astype(jnp.float32)
+        outs[b], errs[b] = backend.sync(bucket, cfg, keys[b])
+    synced = []
+    for i, (shape, dtype, pieces) in enumerate(
+            zip(layout.shapes, layout.dtypes, leaf_segments(layout))):
+        if not pieces:
+            flat = jnp.zeros((0,), jnp.float32)
+        elif len(pieces) == 1:
+            b, s, e = pieces[0]
+            flat = outs[b][s:e]
+        else:
+            flat = jnp.concatenate([outs[b][s:e] for b, s, e in pieces])
+        synced.append(flat.reshape(shape).astype(dtype))
+    new_residual = None
+    if cfg.error_feedback and all(e is not None for e in errs):
+        new_residual = (jnp.concatenate(errs) if errs
+                        else jnp.zeros((0,), jnp.float32))
+    return jax.tree.unflatten(treedef, synced), new_residual
+
+
 def sync_gradients(grads, cfg: SyncConfig, key: jax.Array | None = None,
-                   residual: jnp.ndarray | None = None):
+                   residual: jnp.ndarray | None = None, readiness=None):
     """Synchronize (average) ``grads`` across cfg.axes.
 
     Returns ``(synced_grads, new_residual)``.  ``residual`` is a 1-D f32
@@ -113,12 +191,17 @@ def sync_gradients(grads, cfg: SyncConfig, key: jax.Array | None = None,
     ``cfg.error_feedback`` is set it is added back into the gradient
     stream before quantization and the returned vector holds this step's
     local quantization error (None for exact backends / feedback off).
+    ``readiness`` (per-leaf emission ranks, overlap mode only) overrides
+    the default reverse-tree-order backward-emission model.
     """
     backend = get_backend(cfg.mode)
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         return grads, residual
     layout = make_layout(leaves, cfg.bucket_bytes)
+    if cfg.overlap:
+        return _sync_streaming(leaves, treedef, layout, backend, cfg, key,
+                               residual, readiness)
     flat = flatten_concat(leaves)
     if cfg.error_feedback and residual is not None:
         flat = flat + residual.astype(jnp.float32)

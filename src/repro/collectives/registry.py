@@ -1,7 +1,8 @@
 """Pluggable collective-backend registry.
 
 A backend owns ONE bucket's synchronization inside shard_map plus the
-analytic wire-byte model the benchmarks consume (EXPERIMENTS.md §Fig6):
+analytic wire models the benchmarks and the perf gate consume
+(EXPERIMENTS.md §Fig6, §Overlap):
 
   sync(flat, cfg, key) -> (synced, local_err | None)
       ``flat`` is a 1-D float32 fused bucket, identical math on every
@@ -11,6 +12,14 @@ analytic wire-byte model the benchmarks consume (EXPERIMENTS.md §Fig6):
   bytes_on_wire(nbytes, n, bits) -> float
       Per-device send-direction wire bytes to synchronize ``nbytes`` of
       raw bf16 gradient across ``n`` peers at gradient width ``bits``.
+
+  time_on_wire(nbytes, n, bits, overlap=False, bucket_bytes=...) -> float
+      Per-device seconds the same sync keeps the wire and the
+      reconfigurable optical fabric busy: line-rate transfer plus
+      per-bucket circuit-reconfiguration latency, pipelined when
+      ``overlap`` (the streaming engine) is on.  ``overlap=True`` must
+      never exceed ``overlap=False`` — the perf gate holds backends to
+      that ratio.
 
 Register custom engines with ``register_backend`` (e.g. experiment
 forks, hardware simulators); the runtime resolves ``SyncConfig.mode``
@@ -23,12 +32,12 @@ _REGISTRY: dict = {}
 
 
 def register_backend(name: str, backend, overwrite: bool = False):
-    """Register ``backend`` (an object with sync/bytes_on_wire) under
-    ``name``. Returns the backend so it can be used as a decorator-ish
-    one-liner at definition sites."""
+    """Register ``backend`` (an object with sync/bytes_on_wire/
+    time_on_wire) under ``name``. Returns the backend so it can be used
+    as a decorator-ish one-liner at definition sites."""
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"collective backend {name!r} already registered")
-    for attr in ("sync", "bytes_on_wire"):
+    for attr in ("sync", "bytes_on_wire", "time_on_wire"):
         if not callable(getattr(backend, attr, None)):
             raise TypeError(f"backend {name!r} lacks a callable {attr}()")
     _REGISTRY[name] = backend

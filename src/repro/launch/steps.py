@@ -12,6 +12,10 @@ reduce-scattered over 'data' by the all-gather transpose; the remaining
 explicit sync (and OptINC's target) is the cross-pod axis.  The
 replicated and FSDP-sharded leaf groups are bucketed separately so each
 group issues O(ceil(bytes / bucket_bytes)) collective launches per step.
+With ``SyncConfig.overlap`` those launches stream in gradient-readiness
+order (``grad_readiness``): a bucket's collective depends only on the
+leaves it fuses, so the optical fabric starts reducing the deepest
+layers' gradients while the shallower layers are still differentiating.
 
 Error-feedback residuals are explicit step state: ``step`` takes and
 returns a ``sync_state`` dict ({} when feedback is off, otherwise
@@ -63,17 +67,29 @@ def _fsdp_leaf_tree(specs, ctx: ShardCtx):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def _group_sync(group, sync: SyncConfig, key, residual):
+def _group_sync(group, sync: SyncConfig, key, residual, readiness=None):
     """Sync one leaf group through the bucketed engine, always returning a
     residual vector of stable shape when error feedback is on (exact
     backends yield no quantization error -> zeros)."""
     if not group:
         return [], (jnp.zeros((0,), jnp.float32) if sync.error_feedback
                     else None)
-    synced, new_res = sync_gradients(group, sync, key, residual)
+    synced, new_res = sync_gradients(group, sync, key, residual,
+                                     readiness=readiness)
     if sync.error_feedback and new_res is None:
         new_res = jnp.zeros((residual_size(group),), jnp.float32)
     return synced, new_res
+
+
+def grad_readiness(global_indices, n_leaves: int) -> tuple:
+    """Per-leaf gradient emission ranks for a leaf group (lower = that
+    gradient leaves the backward earlier).  Backward differentiates the
+    network back to front, so the LAST leaf of the (forward-ordered)
+    param tree is ready first: leaf i is ready at rank n_leaves - 1 - i.
+    This is the readiness model the streaming engine's ``launch_order``
+    consumes; ranks are computed from GLOBAL leaf indices so the two
+    leaf groups of ``_split_sync`` schedule against the same backward."""
+    return tuple(n_leaves - 1 - i for i in global_indices)
 
 
 def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, sync_state):
@@ -81,9 +97,12 @@ def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, sync_state):
     grads only over the pod axis (and rescale the AD sum to a mean).
 
     Each group is fused into fixed-size buckets before the collective, so
-    the launch count is O(buckets), not O(leaves).  Returns
-    ``(synced_grads, new_sync_state)``; ``sync_state`` carries the two
-    groups' error-feedback residual vectors ({} when feedback is off).
+    the launch count is O(buckets), not O(leaves).  With ``sync.overlap``
+    each group's buckets dispatch in gradient-readiness order
+    (``grad_readiness``) instead of behind a full-pytree barrier.
+    Returns ``(synced_grads, new_sync_state)``; ``sync_state`` carries
+    the two groups' error-feedback residual vectors ({} when feedback is
+    off).
     """
     leaves, treedef = jax.tree.flatten(grads)
     masks = jax.tree.leaves(fsdp_mask)
@@ -100,7 +119,8 @@ def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, sync_state):
     synced_rep, rep_res = _group_sync(
         [leaves[i] for i in rep_idx],
         dataclasses.replace(sync, axes=rep_axes),
-        k_rep, sync_state.get("rep") if ef else None)
+        k_rep, sync_state.get("rep") if ef else None,
+        readiness=grad_readiness(rep_idx, len(leaves)))
     # fsdp leaves: AD already reduce-scattered (summed) over 'data' ->
     # rescale to a mean, then sync the remaining cross-pod level.  That
     # single level is exactly a one-level OptINC, so cascade mode (which
@@ -110,7 +130,8 @@ def _split_sync(grads, fsdp_mask, ctx, sync: SyncConfig, key, sync_state):
         pod_mode = "optinc" if sync.mode == "cascade" else sync.mode
         synced_fs, fs_res = _group_sync(
             fs, dataclasses.replace(sync, axes=pod_axes, mode=pod_mode),
-            k_fs, sync_state.get("fsdp") if ef else None)
+            k_fs, sync_state.get("fsdp") if ef else None,
+            readiness=grad_readiness(fs_idx, len(leaves)))
     else:
         synced_fs = fs
         fs_res = (jnp.zeros((residual_size(fs),), jnp.float32) if ef

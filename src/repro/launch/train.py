@@ -9,6 +9,12 @@
   PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
       --smoke-config --sync cascade --mesh 2x1 --bucket-mb 4
 
+  # streaming engine: buckets dispatch in gradient-readiness order so
+  # collectives overlap the remaining backward (bit-identical losses to
+  # the barrier path — EXPERIMENTS.md §Overlap)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync cascade --mesh 2x1 --overlap
+
   # hardware-in-the-loop: the MZI mesh emulator computes the averaged
   # gradient inside the jitted step (--fidelity onn uses the dense ONN;
   # bits<=2 resolves the built-in exact identity ONN, wider bit widths

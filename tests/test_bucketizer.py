@@ -1,5 +1,6 @@
 """Bucketizer: flatten/unflatten round-trip exactness over mixed
-shape/dtype pytrees, and the launch-budget arithmetic."""
+shape/dtype pytrees, the launch-budget arithmetic, and the streaming
+engine's segment/launch-order maps."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,8 @@ import pytest
 
 from repro.collectives import (bucketize, expected_buckets, make_layout,
                                tree_bucketize, tree_unbucketize, unbucketize)
+from repro.collectives.bucketizer import (bucket_segments, launch_order,
+                                          leaf_segments)
 
 
 def _mixed_tree():
@@ -69,3 +72,99 @@ def test_empty_tree():
     buckets, aux = tree_bucketize({}, 4096)
     assert buckets == []
     assert tree_unbucketize(buckets, aux) == {}
+
+
+# ------------------------------- edge cases --------------------------------
+
+def test_single_bucket_larger_than_model():
+    """bucket_bytes >> total size: exactly ONE bucket covering everything,
+    no empty ragged tail."""
+    leaves = [jnp.arange(10, dtype=jnp.float32), jnp.ones((3,), jnp.float32)]
+    layout = make_layout(leaves, bucket_bytes=64 * 2 ** 20)
+    assert layout.n_buckets == 1
+    assert layout.bounds == ((0, 13),)
+    assert all(e > s for s, e in layout.bounds)  # never a zero-size bucket
+    buckets = bucketize(leaves, layout)
+    assert len(buckets) == 1 and buckets[0].shape == (13,)
+    back = unbucketize(buckets, layout)
+    assert bool((back[0] == leaves[0]).all())
+    assert bool((back[1] == leaves[1]).all())
+
+
+def test_single_leaf_tree_layout():
+    leaves = [jnp.arange(100, dtype=jnp.float32)]
+    for bb in (64, 400, 4096):  # smaller, exact, larger than the leaf
+        layout = make_layout(leaves, bucket_bytes=bb)
+        assert all(e > s for s, e in layout.bounds)
+        assert layout.bounds[-1][1] == 100
+        (back,) = unbucketize(bucketize(leaves, layout), layout)
+        assert bool((back == leaves[0]).all())
+        # segments of a single leaf tile it exactly, in order
+        segs = leaf_segments(layout)[0]
+        assert [b for b, _, _ in segs] == list(range(layout.n_buckets))
+
+
+def test_exact_multiple_no_empty_tail():
+    """total a multiple of the bucket size: the last bucket is full, not
+    followed by an empty one."""
+    leaves = [jnp.zeros((128,), jnp.float32)]
+    layout = make_layout(leaves, bucket_bytes=256)  # 64 elems -> 2 buckets
+    assert layout.n_buckets == 2
+    assert layout.bounds == ((0, 64), (64, 128))
+
+
+def test_zero_size_leaf_in_no_bucket():
+    leaves = [jnp.zeros((5,), jnp.float32), jnp.zeros((0,), jnp.float32),
+              jnp.zeros((7,), jnp.float32)]
+    layout = make_layout(leaves, bucket_bytes=16)
+    segs = bucket_segments(layout)
+    assert all(i != 1 for seg in segs for i, _, _ in seg)
+    assert leaf_segments(layout)[1] == ()
+    back = unbucketize(bucketize(leaves, layout), layout)
+    assert back[1].shape == (0,)
+
+
+# ------------------------ streaming segment maps ---------------------------
+
+def test_bucket_segments_tile_bounds():
+    leaves = [jnp.zeros((600,)), jnp.zeros((300,)), jnp.zeros((77,))]
+    layout = make_layout(leaves, bucket_bytes=1024)  # 256-elem buckets
+    offsets = np.cumsum([0] + [int(l.size) for l in leaves])[:-1]
+    for b, seg in enumerate(bucket_segments(layout)):
+        s, e = layout.bounds[b]
+        covered = sorted((offsets[i] + a, offsets[i] + t)
+                         for i, a, t in seg)
+        # leaf-local slices, translated to concat space, tile [s, e)
+        assert covered[0][0] == s and covered[-1][1] == e
+        for (_, hi), (lo, _) in zip(covered, covered[1:]):
+            assert hi == lo
+
+
+def test_leaf_segments_is_transpose():
+    leaves = [jnp.zeros((600,)), jnp.zeros((300,)), jnp.zeros((77,))]
+    layout = make_layout(leaves, bucket_bytes=1024)
+    pairs_a = {(i, b) for b, seg in enumerate(bucket_segments(layout))
+               for i, _, _ in seg}
+    pairs_b = {(i, b) for i, segs in enumerate(leaf_segments(layout))
+               for b, _, _ in segs}
+    assert pairs_a == pairs_b
+    # per-leaf pieces cover each leaf exactly
+    for i, segs in enumerate(leaf_segments(layout)):
+        assert sum(e - s for _, s, e in segs) == layout.sizes[i]
+
+
+def test_launch_order_default_is_reversed_buckets():
+    leaves = [jnp.zeros((600,)), jnp.zeros((300,)), jnp.zeros((77,))]
+    layout = make_layout(leaves, bucket_bytes=1024)
+    order = launch_order(layout)
+    assert order == tuple(reversed(range(layout.n_buckets)))
+
+
+def test_launch_order_custom_readiness_and_validation():
+    leaves = [jnp.zeros((64,)), jnp.zeros((64,))]
+    layout = make_layout(leaves, bucket_bytes=256)  # one bucket per leaf
+    # forward-emission readiness: tree order is launch order
+    assert launch_order(layout, readiness=(0, 1)) == (0, 1)
+    assert launch_order(layout, readiness=(1, 0)) == (1, 0)
+    with pytest.raises(ValueError):
+        launch_order(layout, readiness=(0,))

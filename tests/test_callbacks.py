@@ -1,0 +1,46 @@
+"""TrainSession callback stack: StragglerWatchdog semantics."""
+from repro.api.callbacks import StragglerWatchdog
+
+
+def _feed(wd, times):
+    records = []
+    for t in times:
+        rec = {"step": len(records), "time_s": t}
+        wd.on_step_end(None, rec)
+        records.append(rec)
+    return records
+
+
+def test_watchdog_flags_threshold_trip():
+    wd = StragglerWatchdog(factor=3.0, window=50, warmup=3)
+    recs = _feed(wd, [1.0] * 5 + [10.0])
+    assert all("straggler" not in r for r in recs[:5])
+    assert recs[-1].get("straggler") is True
+    assert wd.n_flagged == 1
+
+
+def test_watchdog_resets_on_progress():
+    """One straggler must not poison the rolling median: subsequent normal
+    steps come back clean."""
+    wd = StragglerWatchdog(factor=3.0, window=50, warmup=3)
+    recs = _feed(wd, [1.0] * 5 + [10.0] + [1.0] * 5)
+    assert recs[5].get("straggler") is True
+    assert all("straggler" not in r for r in recs[6:])
+    assert wd.n_flagged == 1
+
+
+def test_watchdog_warmup_suppresses_early_flags():
+    wd = StragglerWatchdog(factor=3.0, window=50, warmup=10)
+    recs = _feed(wd, [1.0, 1.0, 50.0])
+    assert all("straggler" not in r for r in recs)
+    assert wd.n_flagged == 0
+
+
+def test_watchdog_disabled_is_noop():
+    for factor in (0.0, -1.0):
+        wd = StragglerWatchdog(factor=factor, window=50, warmup=0)
+        recs = _feed(wd, [1.0, 1.0, 1.0, 1000.0])
+        assert not wd.enabled
+        assert all("straggler" not in r for r in recs)
+        assert wd.times == []  # no history kept at all
+        assert wd.n_flagged == 0

@@ -43,6 +43,7 @@ def test_registry_builtins():
     for name in ("psum", "ring", "optinc", "cascade"):
         b = get_backend(name)
         assert callable(b.sync) and callable(b.bytes_on_wire)
+        assert callable(b.time_on_wire)
 
 
 def test_registry_rejects_duplicates_and_unknown():
@@ -58,6 +59,10 @@ def test_custom_backend_usable_as_sync_mode():
             return -flat, None
 
         def bytes_on_wire(self, nbytes, n, bits):
+            return 0.0
+
+        def time_on_wire(self, nbytes, n, bits, overlap=False,
+                         bucket_bytes=0):
             return 0.0
 
     register_backend("negate-test", Negate(), overwrite=True)
