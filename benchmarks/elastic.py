@@ -1,0 +1,106 @@
+"""Elastic-recovery benchmark: the chaos scenario as a gated metric.
+
+Runs ``repro.elastic.chaos.run_chaos`` — four worker processes over a
+(pods=2, dp=2) cascade base topology, one SIGKILLed mid-run — and emits
+one row with the recovery facts the perf gate holds
+(scripts/check_perf_regression.py, section ``elastic``):
+
+  us_per_call      0.0 (this is a correctness/recovery row, not a timing
+                   row — the time check skips ~0 baselines)
+  recovered        1 iff the survivors re-derived a smaller topology AND
+                   the post-recovery losses kept descending (gated == 1)
+  old_topo/new_topo  the mesh shapes either side of the membership change
+  new_n/new_n1     the re-derived collective size and level-1 split (the
+                   1/N carry grid and bytes_on_wire follow from these)
+  wire_bytes_ratio new/old modeled bytes_on_wire — shrinking the world
+                   must shrink the modeled wire cost
+  drain_s          seconds between the monitor detecting the change and
+                   the epoch draining to its re-derivation point
+  recover_s        SIGKILL -> run-complete wall time
+  loss_first/last  loss trajectory endpoints across BOTH epochs
+
+Rows mirror to results/bench/elastic.json; the committed
+results/bench/elastic_baseline.json is the regression reference.
+
+    PYTHONPATH=src python -m benchmarks.elastic [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+import tempfile
+
+from .common import emit, flush_json
+
+sys.path.insert(0, "src")
+
+
+def _shape(t) -> str:
+    return "x".join(str(x) for x in t)
+
+
+def main(full: bool = False, smoke: bool = False):
+    try:
+        _run(full=full, smoke=smoke)
+    finally:
+        flush_json("elastic")
+
+
+def _run(full: bool, smoke: bool):
+    from repro.elastic.chaos import run_chaos
+
+    steps = 24 if full else 12
+    workdir = tempfile.mkdtemp(prefix="elastic_chaos_")
+    try:
+        result = run_chaos(workdir, n_workers=4, kill_index=3,
+                           kill_after_step=0, steps=steps)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    events = result.get("events", [])
+    history = result.get("history", [])
+    losses = [r["loss"] for r in history]
+    ev = events[0] if events else {}
+    post = ([r["loss"] for r in history if r["step"] >= ev["step"]]
+            if ev else [])
+    recovered = int(
+        bool(ev)
+        and ev.get("new_topology") == [1, 2]       # (pods, dp): one pod left
+        and not result.get("error")
+        and len(post) >= 2 and post[-1] < post[0]
+        and all(l == l and abs(l) != float("inf") for l in losses))
+    old_topo = _shape(ev.get("old_topology", ["?"]))
+    new_topo = _shape(ev.get("new_topology", ["?"]))
+    ratio = ""
+    if ev:
+        from repro.api import MeshSpec, RunSpec, SyncConfig, build
+        base = RunSpec(arch="minitron_4b", smoke=True,
+                       mesh=MeshSpec(pods=2, dp=2),
+                       sync=SyncConfig(mode="cascade"))
+        import dataclasses
+        shrunk = dataclasses.replace(
+            base, mesh=dataclasses.replace(base.mesh, pods=1))
+        ratio = (f" wire_bytes_ratio="
+                 f"{build.modeled_bytes_on_wire(shrunk) / build.modeled_bytes_on_wire(base):.3f}")
+    emit("elastic.chaos.cascade", 0.0,
+         f"recovered={recovered} old_topo={old_topo} new_topo={new_topo} "
+         f"new_n={ev.get('n', 0)} new_n1={ev.get('n1', 0)} "
+         f"drain_s={ev.get('drain_s', -1)} "
+         f"recover_s={result.get('kill', {}).get('recover_s', -1)} "
+         f"loss_first={losses[0] if losses else -1} "
+         f"loss_last={losses[-1] if losses else -1}{ratio}")
+    if not recovered:
+        raise RuntimeError(
+            f"chaos run did not recover: events={events!r} "
+            f"losses={losses!r} error={result.get('error')!r}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter run (the chaos scenario is already the "
+                         "smoke arch)")
+    args = ap.parse_args()
+    main(full=args.full, smoke=args.smoke)

@@ -12,7 +12,7 @@ import argparse
 import sys
 import traceback
 
-from . import (common, fig6, fig7a, fig7b, mesh_emulation, overlap,
+from . import (common, elastic, fig6, fig7a, fig7b, mesh_emulation, overlap,
                roofline_table, serve_throughput, table1, table2, trained_onn)
 
 SECTIONS = {
@@ -26,6 +26,7 @@ SECTIONS = {
     "roofline": roofline_table.main,
     "serve_throughput": serve_throughput.main,
     "overlap": overlap.main,
+    "elastic": elastic.main,
 }
 
 

@@ -19,7 +19,11 @@ just happened, e.g. the CI benchmarks-smoke job) against the committed
   two invariants regardless of CI wall-clock noise: ``wire_ratio=``
   (overlap-on / overlap-off modeled time_on_wire) must stay <= 1.0, and
   ``losses_match=`` must stay 1 — streaming may never cost wire time or
-  perturb numerics.
+  perturb numerics;
+* elastic rows (benchmarks.elastic, gated via ``--sections elastic`` in
+  the CI chaos-smoke step) must keep ``recovered=`` at 1 — the
+  SIGKILL'd 4-process cascade run re-derived the shrunk topology and
+  its post-recovery loss kept descending.
 
   PYTHONPATH=src python scripts/check_perf_regression.py \
       [--sections mesh_emulation,fig7b,serve_throughput,overlap] \
@@ -49,6 +53,12 @@ RATIO_GATED = re.compile(r"^fig7b\.H100\.llama8L\.mesh$")
 
 # overlap rows: modeled-wire-time and numeric-identity invariants
 OVERLAP_GATED = re.compile(r"^overlap\.")
+
+# elastic rows (benchmarks.elastic): the chaos run must RECOVER — the
+# survivors re-derived the shrunk topology and the post-recovery loss
+# kept descending.  Timing is not gated (us_per_call ~ 0 skips it);
+# recovery is binary.
+ELASTIC_GATED = re.compile(r"^elastic\.")
 
 
 def load_rows(path: pathlib.Path) -> dict:
@@ -101,6 +111,13 @@ def check_section(section: str, tol: float, ratio_cap: float) -> list:
                     f"{section}: {name} losses_match={lm:g} — the "
                     f"streaming engine's losses diverged from the barrier "
                     f"path")
+        if ELASTIC_GATED.match(name):
+            rec = derived_field(frow, "recovered")
+            if rec is not None and rec != 1:
+                errors.append(
+                    f"{section}: {name} recovered={rec:g} — the chaos run "
+                    f"did not survive the SIGKILL (no topology "
+                    f"re-derivation or the post-recovery loss stalled)")
     return errors
 
 

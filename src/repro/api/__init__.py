@@ -3,6 +3,7 @@
   RunSpec / MeshSpec / CheckpointConfig  (spec.py)  : describe a scenario
   TrainSession                           (session.py): run it
   ServeSession                           (serve.py) : serve it
+  ElasticTrainSession                    (repro.elastic): run it elastically
   build_* / *_sds helpers          (build.py, shapes.py): lower it
 
 ``launch/train.py``, ``launch/dryrun.py``, the examples, and the benchmark
@@ -11,28 +12,42 @@ quickstart and the scenario matrix.
 """
 from ..collectives import SyncConfig
 from ..data import DataConfig
+from ..elastic import ElasticError, Membership
+from ..elastic.config import ElasticConfig
 from ..optim import AdamWConfig
 from ..photonics import PhotonicsConfig
 from ..serving.config import ServeConfig
 from .build import (build_decode_step, build_prefill_step, build_train_step,
-                    decode_cache_specs, init_sync_state, param_specs,
+                    decode_cache_specs, init_sync_state,
+                    modeled_bytes_on_wire, modeled_time_on_wire, param_specs,
                     sync_state_specs)
 from .callbacks import (Callback, JsonlLogger, PeriodicCheckpoint,
                         SigtermHandler, StragglerWatchdog, default_callbacks)
 from .serve import ServeSession
 from .session import TrainSession
-from .spec import (CheckpointConfig, MeshSpec, RunSpec, SpecError,
-                   SpecMismatchError, validate_resume_compat)
+from .spec import (CheckpointConfig, MeshSpec, ResumeCompat, RunSpec,
+                   SpecError, SpecMismatchError, check_resume_compat,
+                   validate_resume_compat)
 
 __all__ = [
     "RunSpec", "MeshSpec", "CheckpointConfig", "ServeConfig", "SyncConfig",
-    "AdamWConfig", "DataConfig", "PhotonicsConfig", "SpecError",
-    "SpecMismatchError",
-    "validate_resume_compat",
-    "TrainSession", "ServeSession",
+    "AdamWConfig", "DataConfig", "PhotonicsConfig", "ElasticConfig",
+    "SpecError", "SpecMismatchError",
+    "ResumeCompat", "check_resume_compat", "validate_resume_compat",
+    "Membership", "ElasticError",
+    "TrainSession", "ServeSession", "ElasticTrainSession",
     "Callback", "JsonlLogger", "PeriodicCheckpoint", "SigtermHandler",
     "StragglerWatchdog", "default_callbacks",
     "build_train_step", "build_prefill_step", "build_decode_step",
     "init_sync_state", "sync_state_specs", "decode_cache_specs",
-    "param_specs",
+    "param_specs", "modeled_bytes_on_wire", "modeled_time_on_wire",
 ]
+
+
+def __getattr__(name):
+    # ElasticTrainSession lives in repro.elastic (which imports repro.api
+    # lazily); loading it on demand keeps the import graph cycle-free
+    if name == "ElasticTrainSession":
+        from ..elastic.session import ElasticTrainSession
+        return ElasticTrainSession
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

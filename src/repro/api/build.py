@@ -59,6 +59,22 @@ def modeled_time_on_wire(spec: RunSpec, cfg=None, overlap=None) -> float:
         bucket_bytes=sync.bucket_bytes, **kw)
 
 
+def modeled_bytes_on_wire(spec: RunSpec, cfg=None) -> float:
+    """Analytic per-step optical-wire bytes for spec's sync scenario
+    (backend ``bytes_on_wire`` over the live N = pods * dp, with the
+    cascade's actual level-1 split N1 = dp).  Pure arithmetic — the
+    elastic session logs this per membership epoch so a topology change
+    is visible as a wire-cost change, and fig6 uses the same backend
+    accounting."""
+    from ..collectives import get_backend
+    cfg = cfg if cfg is not None else spec.model_config()
+    sync = spec.resolved_sync()
+    nbytes = 2 * cfg.param_count()          # bf16 gradient bytes
+    n = spec.mesh.pods * spec.mesh.dp
+    kw = {"n1": spec.mesh.dp} if sync.mode == "cascade" else {}
+    return get_backend(sync.mode).bytes_on_wire(nbytes, n, sync.bits, **kw)
+
+
 def build_train_step(spec: RunSpec, cfg=None, mesh=None):
     """(step_fn, in_specs, out_specs) for spec's training scenario.
     step(params, opt_state, sync_state, batch, key) — shard_map'd, not

@@ -5,16 +5,26 @@ periodic checkpointing, SIGTERM-safe final save, straggler watchdog) is
 now a small callback stack; a scenario adds behavior by appending a
 callback, not by forking the driver.
 
-Hooks (all optional — subclass and override what you need):
+The protocol (all hooks optional — subclass and override what you need):
 
   on_train_start(session)
-  on_step_end(session, record)   # record: mutable per-step dict; callbacks
+  on_step(session, record)       # record: mutable per-step dict; callbacks
                                  # may read/annotate it (step, loss, time_s)
+  on_checkpoint(session, step)   # after a checkpoint save is queued
+  on_membership_change(old_mesh, new_mesh, step)
+                                 # elastic runs: the live topology changed;
+                                 # the session is about to reshard-resume
   on_train_end(session)
+
+``on_step_end`` is the legacy name of ``on_step``; the base class keeps
+it as a delegating alias so both existing subclasses (which override
+``on_step_end``) and existing callers (the session loop, tests invoking
+it directly) continue to work unchanged.
 
 ``session.request_stop()`` ends the loop after the current step;
 PeriodicCheckpoint treats a requested stop like a final step, so a
-SIGTERM'd run always leaves a fresh checkpoint behind.
+SIGTERM'd (or membership-interrupted) run always leaves a fresh
+checkpoint behind.
 """
 from __future__ import annotations
 
@@ -27,7 +37,18 @@ class Callback:
     def on_train_start(self, session):
         pass
 
+    def on_step(self, session, record: dict):
+        pass
+
     def on_step_end(self, session, record: dict):
+        # legacy alias: the loop calls on_step_end; new-style callbacks
+        # override on_step, old-style ones override this directly
+        self.on_step(session, record)
+
+    def on_checkpoint(self, session, step: int):
+        pass
+
+    def on_membership_change(self, old_mesh, new_mesh, step: int):
         pass
 
     def on_train_end(self, session):
@@ -43,28 +64,61 @@ class StragglerWatchdog(Callback):
     under the threshold resets nothing — the rolling window keeps sliding,
     so one straggler does not poison the median for later steps.
     ``n_flagged`` counts the stragglers seen this run.
+
+    Escalation (``--evict-after``): with a ``membership`` registry bound,
+    ``evict_after`` CONSECUTIVE flags on the same rank report that member
+    to the registry as suspect — the elastic session then drains its pod
+    at the next membership poll instead of dragging every allreduce at
+    straggler speed.  A clean step resets the rank's streak; a suspect is
+    reported once (the member re-admits itself by beating again).
+    Records may carry an explicit ``record["rank"]``; single-process runs
+    default to this watchdog's own ``member`` identity.
     """
 
-    def __init__(self, factor: float = 3.0, window: int = 50, warmup: int = 10):
+    def __init__(self, factor: float = 3.0, window: int = 50,
+                 warmup: int = 10, evict_after: int = 0, membership=None,
+                 member: str | None = None):
         self.factor = factor
         self.window = window
         self.warmup = warmup
+        self.evict_after = evict_after
+        self.membership = membership
+        self.member = member
         self.times = []
         self.n_flagged = 0
+        self.streaks = {}          # rank -> consecutive flags
+        self.suspected = set()     # ranks already reported
 
     @property
     def enabled(self) -> bool:
         return self.factor > 0
 
-    def on_step_end(self, session, record):
+    def on_step(self, session, record):
         if not self.enabled:
             return
         dt = record.get("time_s", 0.0)
         self.times.append(dt)
         med = statistics.median(self.times[-self.window:])
+        rank = record.get("rank", self.member)
         if len(self.times) > self.warmup and dt > self.factor * med:
             record["straggler"] = True
             self.n_flagged += 1
+            self._escalate(rank, dt, med, record)
+        else:
+            self.streaks[rank] = 0
+
+    def _escalate(self, rank, dt, med, record):
+        if not self.evict_after:
+            return
+        self.streaks[rank] = self.streaks.get(rank, 0) + 1
+        if (self.streaks[rank] >= self.evict_after
+                and self.membership is not None
+                and rank is not None and rank not in self.suspected):
+            self.membership.suspect(
+                rank, reason=f"{self.streaks[rank]} consecutive straggler "
+                             f"flags (last {dt:.3f}s vs median {med:.3f}s)")
+            self.suspected.add(rank)
+            record["suspected"] = rank
 
 
 class JsonlLogger(Callback):
@@ -79,7 +133,7 @@ class JsonlLogger(Callback):
         if self.path:
             self._f = open(self.path, "a")
 
-    def on_step_end(self, session, record):
+    def on_step(self, session, record):
         line = json.dumps(record)
         if self.echo:
             print(line, flush=True)
@@ -105,7 +159,7 @@ class PeriodicCheckpoint(Callback):
     def on_train_start(self, session):
         self._last_run = None
 
-    def on_step_end(self, session, record):
+    def on_step(self, session, record):
         step = record["step"]
         self._last_run = step
         if session.mgr and ((step + 1) % self.every == 0
@@ -144,9 +198,12 @@ class SigtermHandler(Callback):
         self._previous = {}
 
 
-def default_callbacks(spec) -> list:
-    """The train.py-equivalent stack for a RunSpec."""
-    return [StragglerWatchdog(spec.watchdog),
+def default_callbacks(spec, membership=None) -> list:
+    """The train.py-equivalent stack for a RunSpec.  ``membership`` arms
+    the watchdog's suspect-report escalation (elastic runs)."""
+    return [StragglerWatchdog(spec.watchdog,
+                              evict_after=spec.elastic.evict_after,
+                              membership=membership),
             JsonlLogger(spec.log),
             PeriodicCheckpoint(spec.ckpt.every),
             SigtermHandler()]

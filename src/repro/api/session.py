@@ -88,6 +88,8 @@ class TrainSession:
                       sync_state=sync_state,
                       extra={"run_spec": self.spec.to_json_dict(),
                              "arch": self.cfg.name, "sync": self.sync.mode})
+        for cb in self.callbacks:
+            cb.on_checkpoint(self, step)
 
     def _maybe_resume(self):
         c = self.spec.ckpt
@@ -96,9 +98,14 @@ class TrainSession:
             return
         man = read_manifest(c.dir, s)
         saved_spec = (man.get("extra") or {}).get("run_spec")
+        resharded, saved = False, None
         if saved_spec is not None:
-            validate_resume_compat(RunSpec.from_json_dict(saved_spec),
-                                   self.spec)
+            saved = RunSpec.from_json_dict(saved_spec)
+            allow = (self.spec.elastic.allow_reshard
+                     or self.spec.elastic.enabled)
+            compat = validate_resume_compat(saved, self.spec,
+                                            allow_reshard=allow)
+            resharded = compat.verdict == "reshardable"
         p_specs, o_specs = build.param_specs(self.spec, self.cfg)
         template = {"params": self.params, "opt": self.opt_state}
         specs = {"params": p_specs, "opt": o_specs}
@@ -110,9 +117,24 @@ class TrainSession:
         sync_packed = bool(sync_paths) and all(
             p.rsplit("/", 1)[-1] in ("idx", "val", "shape")
             for p in sync_paths)
+        # error-feedback residual buckets are sized by device count, so a
+        # resharded resume may find them re-bucketized: restore any leaf
+        # whose saved shape still matches, re-zero the rest (the carry
+        # they held was an intra-step numerical refinement, not model
+        # state — EXPERIMENTS.md §Elastic training)
+        sync_shapes_ok = self.sync_state and sync_paths and all(
+            list((man["leaves"].get(f"sync/{name}") or {}).get("shape", ()))
+            == list(v.shape) for name, v in self.sync_state.items())
         if self.sync_state and sync_paths and not sync_packed:
-            template["sync"] = self.sync_state
-            specs["sync"] = build.sync_state_specs(self.spec, self.mesh)
+            if sync_shapes_ok or not resharded:
+                # exact resumes keep the strict path: a shape mismatch
+                # without a mesh change is corruption, and
+                # load_checkpoint names the offending leaf
+                template["sync"] = self.sync_state
+                specs["sync"] = build.sync_state_specs(self.spec, self.mesh)
+            else:
+                print("resharded resume: error-feedback residual buckets "
+                      "changed shape; residuals re-zeroed", flush=True)
         elif self.sync_state and not sync_paths:
             print("checkpoint predates sync_state persistence; "
                   "error-feedback residuals restart from zero", flush=True)
@@ -122,9 +144,20 @@ class TrainSession:
         if "sync" in tree:
             self.sync_state = tree["sync"]
         elif self.sync_state and sync_packed:
-            self.sync_state = self._load_packed_sync(c.dir, s)
+            try:
+                self.sync_state = self._load_packed_sync(c.dir, s)
+            except ValueError:
+                if not resharded:
+                    raise
+                print("resharded resume: error-feedback residual buckets "
+                      "changed shape; residuals re-zeroed", flush=True)
         self.step = s + 1
-        print(f"resumed from step {s}", flush=True)
+        note = ""
+        if resharded and saved is not None:
+            note = (f" (resharded {saved.mesh.shape} -> "
+                    f"{self.spec.mesh.shape}; data pipeline continues at "
+                    f"sample offset of step {s + 1})")
+        print(f"resumed from step {s}{note}", flush=True)
 
     def _load_packed_sync(self, direc, step: int) -> dict:
         """Restore block-sparse error-feedback residuals: read the packed

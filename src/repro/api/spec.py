@@ -22,6 +22,7 @@ import pathlib
 
 from ..collectives import SyncConfig, available_backends
 from ..data import DataConfig
+from ..elastic.config import ElasticConfig
 from ..launch.mesh import make_mesh
 from ..models.layers import ShardCtx
 from ..optim import AdamWConfig
@@ -138,6 +139,7 @@ class RunSpec:
     data: DataConfig = DataConfig(vocab=0, seed=0)
     ckpt: CheckpointConfig = CheckpointConfig()
     serve: ServeConfig = ServeConfig()
+    elastic: ElasticConfig = ElasticConfig()
     steps: int = 100
     seed: int = 0
     watchdog: float = 3.0               # straggler threshold (x median)
@@ -170,9 +172,22 @@ class RunSpec:
         if self.sync.mode not in available_backends():
             raise SpecError(f"unknown sync backend {self.sync.mode!r} "
                             f"(registered: {sorted(available_backends())})")
-        if self.sync.mode == "cascade" and self.mesh.pods < 2:
+        if (self.sync.mode == "cascade" and self.mesh.pods < 2
+                and not (self.elastic.enabled or self.elastic.allow_reshard)):
+            # an elastic run may legally shrink to one pod mid-flight (the
+            # cascade degrades to its N2 == 1 one-level form), so the
+            # two-pod floor only binds static topologies
             raise SpecError("--sync cascade needs a level-2 'pod' axis "
                             "(mesh.pods >= 2, e.g. --pods 2)")
+        if self.elastic.enabled and self.sync.mode == "psum":
+            raise SpecError(
+                "--elastic re-derives the collective topology (cascade "
+                "axes, carry grid, ONN programming) on membership change; "
+                "--sync psum has no topology to re-derive — use "
+                "optinc/cascade/ring")
+        if self.elastic.enabled and not self.ckpt.dir:
+            raise SpecError("--elastic resumes from the latest checkpoint "
+                            "after a membership change and needs --ckpt-dir")
         # (an unknown fidelity/params value is rejected by PhotonicsConfig
         # itself at construction time — _from_dict wraps that in SpecError)
         ph = self.sync.photonics
@@ -260,14 +275,25 @@ class RunSpec:
             raise SpecError(f"spec file {path} is not valid JSON: {e}")
 
     # ------------------------------------------------ resume compatibility
-    def compat_fingerprint(self) -> dict:
-        """The spec fields that determine checkpoint state STRUCTURE.
-        Anything else (lr, steps, sync mode, bits, ...) may change across
-        a resume; these may not."""
+    def state_fingerprint(self) -> dict:
+        """The spec fields that determine checkpoint state CONTENT — the
+        global shapes and meaning of the saved arrays.  These must match
+        EXACTLY across any resume, resharded or not."""
         return {"arch": self.arch, "smoke": self.smoke,
-                "mesh": dataclasses.asdict(self.mesh),
                 "moment_dtype": self.optim.moment_dtype,
                 "error_feedback": self.sync.error_feedback}
+
+    def shape_fingerprint(self) -> dict:
+        """The spec fields that determine only the state's PLACEMENT (mesh
+        axes / sharding).  These may differ across a resume when
+        resharding is allowed: the global arrays re-place onto the new
+        mesh's NamedShardings."""
+        return {"mesh": dataclasses.asdict(self.mesh)}
+
+    def compat_fingerprint(self) -> dict:
+        """state_fingerprint | shape_fingerprint — the legacy exact-match
+        fingerprint (kept: external spec files may reference it)."""
+        return {**self.state_fingerprint(), **self.shape_fingerprint()}
 
     # ------------------------------------------------ CLI surface
     @staticmethod
@@ -329,6 +355,26 @@ class RunSpec:
         ap.add_argument("--ckpt-every", type=int)
         ap.add_argument("--ckpt-keep", type=int)
         ap.add_argument("--resume", action="store_true")
+        # elastic membership runtime (RunSpec.elastic — repro.elastic)
+        ap.add_argument("--elastic", action="store_true",
+                        help="elastic: watch the membership registry and "
+                             "re-derive the collective topology + "
+                             "reshard-resume when a pod drops or joins")
+        ap.add_argument("--heartbeat-s", type=float,
+                        help="elastic: heartbeat period / liveness poll "
+                             "granularity in seconds")
+        ap.add_argument("--allow-reshard", action="store_true",
+                        help="permit --resume onto a different mesh shape "
+                             "(compatible-reshard restore: global state "
+                             "re-placed, error-feedback residuals "
+                             "re-bucketized)")
+        ap.add_argument("--members-dir",
+                        help="elastic: membership registry directory "
+                             "(default <ckpt-dir>/members)")
+        ap.add_argument("--evict-after", type=int,
+                        help="elastic: consecutive straggler flags before "
+                             "the watchdog reports a member suspect "
+                             "(0 = observe only)")
         ap.add_argument("--watchdog", type=float)
         ap.add_argument("--seed", type=int)
         ap.add_argument("--log", help="JSONL metrics file")
@@ -441,6 +487,17 @@ class RunSpec:
                 serve_kw[k] = ns.pop(k)
         if "serve_pages" in ns:
             serve_kw["pages"] = ns.pop("serve_pages")
+        elastic_kw = {}
+        if "elastic" in ns:
+            elastic_kw["enabled"] = ns.pop("elastic")
+        if "heartbeat_s" in ns:
+            elastic_kw["heartbeat_s"] = ns.pop("heartbeat_s")
+        if "allow_reshard" in ns:
+            elastic_kw["allow_reshard"] = ns.pop("allow_reshard")
+        if "members_dir" in ns:
+            elastic_kw["dir"] = ns.pop("members_dir")
+        if "evict_after" in ns:
+            elastic_kw["evict_after"] = ns.pop("evict_after")
         for k in ("steps", "watchdog", "log"):
             if k in ns:
                 top_kw[k] = ns.pop(k)
@@ -461,18 +518,71 @@ class RunSpec:
             data=dataclasses.replace(self.data, **data_kw),
             ckpt=dataclasses.replace(self.ckpt, **ckpt_kw),
             serve=dataclasses.replace(self.serve, **serve_kw),
+            elastic=dataclasses.replace(self.elastic, **elastic_kw),
             **top_kw)
 
 
-def validate_resume_compat(saved: RunSpec, current: RunSpec) -> None:
-    """Raise SpecMismatchError when a checkpointed RunSpec's state-structure
-    fields disagree with the resuming spec's."""
-    a, b = saved.compat_fingerprint(), current.compat_fingerprint()
-    diff = [k for k in b if a.get(k) != b[k]]
-    if diff:
-        detail = "; ".join(f"{k}: checkpoint={a.get(k)!r} vs run={b[k]!r}"
-                           for k in diff)
+@dataclasses.dataclass(frozen=True)
+class ResumeCompat:
+    """Structured verdict of a checkpoint-vs-run spec comparison.
+
+    ``verdict``:
+      * ``"exact"``        — fingerprints identical; bit-exact restore.
+      * ``"reshardable"``  — state fields match, only mesh/placement
+        fields differ; restorable via the compatible-reshard path
+        (params/optimizer re-placed, residuals re-bucketized).
+      * ``"incompatible"`` — state fields differ; the saved arrays do
+        not describe this run's state.
+    """
+    verdict: str                      # exact | reshardable | incompatible
+    state_diff: tuple = ()            # differing state_fingerprint keys
+    shape_diff: tuple = ()            # differing shape_fingerprint keys
+    detail: str = ""                  # human-readable field-by-field diff
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict != "incompatible"
+
+
+def _diff(a: dict, b: dict) -> tuple:
+    return tuple(k for k in b if a.get(k) != b[k])
+
+
+def check_resume_compat(saved: RunSpec, current: RunSpec) -> ResumeCompat:
+    """Pure comparison — never raises.  ``validate_resume_compat`` turns
+    this verdict into the enforcement policy."""
+    state = _diff(saved.state_fingerprint(), current.state_fingerprint())
+    shape = _diff(saved.shape_fingerprint(), current.shape_fingerprint())
+    sa, sb = saved.compat_fingerprint(), current.compat_fingerprint()
+    detail = "; ".join(f"{k}: checkpoint={sa.get(k)!r} vs run={sb[k]!r}"
+                       for k in state + shape)
+    verdict = ("incompatible" if state
+               else "reshardable" if shape else "exact")
+    return ResumeCompat(verdict=verdict, state_diff=state, shape_diff=shape,
+                        detail=detail)
+
+
+def validate_resume_compat(saved: RunSpec, current: RunSpec,
+                           allow_reshard: bool = False) -> ResumeCompat:
+    """Enforce resume compatibility and return the verdict.
+
+    ``incompatible`` always raises SpecMismatchError (unchanged contract:
+    the saved arrays cannot express this run's state).  ``reshardable``
+    raises too unless ``allow_reshard`` — resuming onto a different mesh
+    shape is deliberate, not a typo, so it is gated behind
+    ``--allow-reshard`` (or an ``--elastic`` run, which implies it).
+    """
+    compat = check_resume_compat(saved, current)
+    if compat.verdict == "incompatible":
         raise SpecMismatchError(
-            f"checkpoint was written by an incompatible RunSpec ({detail}). "
-            f"Start a fresh run (drop --resume / change --ckpt-dir) or match "
-            f"the checkpointed spec.")
+            f"checkpoint was written by an incompatible RunSpec "
+            f"({compat.detail}). Start a fresh run (drop --resume / change "
+            f"--ckpt-dir) or match the checkpointed spec.")
+    if compat.verdict == "reshardable" and not allow_reshard:
+        raise SpecMismatchError(
+            f"checkpoint was written on a different mesh shape "
+            f"({compat.detail}). Pass --allow-reshard to resume via the "
+            f"compatible-reshard path (global state re-placed onto the new "
+            f"mesh; error-feedback residuals re-bucketized), or match the "
+            f"checkpointed mesh.")
+    return compat

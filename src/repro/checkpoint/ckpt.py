@@ -151,9 +151,26 @@ def load_checkpoint(direc, step: int, template, mesh=None, specs=None):
     if specs is not None:
         _, spec_leaves, _ = _flatten_with_paths(specs)
     for i, (p, ref) in enumerate(zip(paths, leaves)):
+        if p not in data.files:
+            raise ValueError(
+                f"checkpoint {direc} has no leaf {p!r} (saved leaves: "
+                f"{sorted(man['leaves'])[:8]}...) — the template's tree "
+                f"structure does not match the saved run")
         arr = data[p]
         want = man["leaves"][p]
         assert list(arr.shape) == want["shape"], (p, arr.shape, want)
+        ref_shape = tuple(np.shape(ref))
+        if tuple(arr.shape) != ref_shape:
+            # the reshard path re-PLACES global arrays; it never reshapes
+            # them.  A template whose global shape disagrees with the
+            # saved leaf is a different run (arch/width/bucket change),
+            # not a reshard — fail loudly instead of letting device_put
+            # scatter garbage.
+            raise ValueError(
+                f"checkpoint leaf {p!r}: saved global shape "
+                f"{tuple(arr.shape)} != template shape {ref_shape} — the "
+                f"checkpoint was written by a run with a different state "
+                f"structure and cannot be restored into this one")
         if mesh is not None and spec_leaves is not None:
             sh = jax.sharding.NamedSharding(mesh, spec_leaves[i])
             out.append(jax.device_put(

@@ -365,6 +365,12 @@ class CascadeBackend:
     name = "cascade"
 
     def sync(self, flat, cfg, key):
+        if len(cfg.axes) == 1:
+            # N2 == 1 degenerate cascade (elastic shrink to a single
+            # pod): level 2 has nothing to merge, so the exact eq.-10
+            # result IS the one-level optinc average over the surviving
+            # axis — same quantize/sum/Q(mean) path, same fidelity knobs
+            return OptincBackend().sync(flat, cfg, key)
         if len(cfg.axes) < 2:
             raise ValueError(
                 "cascade sync needs >= 2 mesh axes (level-2..., level-1), "
@@ -396,6 +402,10 @@ class CascadeBackend:
         # comparing against a measured topology (e.g. fig6's pod=2 mesh).
         if n1 is None:
             n1 = max(int(round(n ** 0.5)), 1)
+        if n1 >= n:
+            # single-pod (N2 == 1) degenerate cascade: no level-1 -> 2
+            # carry link exists — the wire cost is one-level optinc's
+            return OptincBackend().bytes_on_wire(nbytes, n, bits)
         elems = nbytes / 2.0
         uplink = elems * bits / 8.0
         carry = elems * (bits + 2 * extra_symbols(n1)) / 8.0 / n1
@@ -418,6 +428,10 @@ class CascadeBackend:
         # longer) is exposed per bucket.
         if n1 is None:
             n1 = max(int(round(n ** 0.5)), 1)
+        if n1 >= n:
+            # single-pod degenerate cascade: one level, optinc timing
+            return OptincBackend().time_on_wire(
+                nbytes, n, bits, overlap=overlap, bucket_bytes=bucket_bytes)
         elems = nbytes / 2.0
         t0 = elems * bits / 8.0 / WIRE_BYTES_PER_S
         t1 = (elems * (bits + 2 * extra_symbols(n1)) / 8.0 / n1

@@ -1,0 +1,34 @@
+"""repro.elastic: elastic membership runtime — world size as a runtime
+property of a training run.
+
+- ``config``     — frozen ElasticConfig (embedded in RunSpec as ``elastic``)
+- ``membership`` — file/heartbeat member registry (multi-process safe)
+- ``topology``   — live-count -> cascade (pods, dp) mesh derivation
+- ``session``    — ElasticTrainSession: detect / re-derive / reshard-resume
+                   loop around TrainSession (lazy: it imports repro.api)
+- ``worker``     — per-process pod agent + leader election (lazy, same)
+- ``chaos``      — multi-process chaos driver: spawn N workers, SIGKILL
+                   one, assert recovery (lazy, same)
+"""
+from .config import ElasticConfig
+from .membership import Membership
+from .topology import ElasticError, derive_topology, member_pod
+
+__all__ = [
+    "ElasticConfig", "Membership", "ElasticError", "derive_topology",
+    "member_pod", "ElasticTrainSession", "MembershipMonitor", "run_chaos",
+]
+
+_LAZY = {"ElasticTrainSession": "session",
+         "MembershipMonitor": "session",
+         "run_chaos": "chaos"}
+
+
+def __getattr__(name):
+    # session/worker/chaos import repro.api (which imports elastic.config);
+    # loading them lazily keeps `import repro.elastic` cycle-free
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,135 @@
+"""Multi-process chaos driver: spawn workers, SIGKILL one, assert recovery.
+
+The headline elastic proof (EXPERIMENTS.md §Elastic training): four
+worker processes join the registry over a ``(pods=2, dp=2)`` cascade
+base topology; once the run has checkpointed past ``kill_after_step``,
+one worker is SIGKILLed (no SIGTERM grace, no atexit — its member file
+simply goes stale).  Member ``i`` of the sorted enumeration sits in pod
+``i // dp``, and a pod needs ALL its dp members, so the loss of one
+worker drains a whole pod: the survivors re-derive the ``(1, 2)``
+topology and the leader reshard-resumes from the last checkpoint.
+
+``run_chaos`` returns the leader's result.json augmented with driver
+observations (kill time, detection latency, worker exit codes).  Used by
+``tests/test_elastic_chaos.py`` and ``benchmarks/elastic.py`` (the CI
+chaos smoke).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import time
+
+
+def _worker_env(devices: int, repo_root: pathlib.Path) -> dict:
+    return {"PYTHONPATH": str(repo_root / "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "HOME": os.environ.get("HOME", "/root"),
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}"}
+
+
+def default_train_args(workdir: pathlib.Path, steps: int = 8) -> list:
+    """The chaos scenario: smallest smoke arch, 2-pod cascade, a
+    checkpoint every step (the recovery point is always fresh), fast
+    heartbeats so detection fits a test budget."""
+    return ["--arch", "minitron_4b", "--smoke-config",
+            "--sync", "cascade", "--mesh", "2x1", "--pods", "2",
+            "--steps", str(steps), "--global-batch", "4",
+            "--seq-len", "32", "--bucket-mb", "1",
+            "--ckpt-dir", str(workdir / "ckpt"), "--ckpt-every", "1",
+            "--elastic", "--allow-reshard", "--heartbeat-s", "0.15",
+            "--watchdog", "0"]
+
+
+def run_chaos(workdir, n_workers: int = 4, kill_index: int = 3,
+              kill_after_step: int = 0, steps: int = 12,
+              timeout_s: float = 900.0, train_args: list | None = None,
+              log=print) -> dict:
+    """Run the kill-one-worker scenario; returns the recovery report.
+
+    Raises RuntimeError when the run does not complete (leader died, no
+    checkpoint appeared, or the deadline passed).
+    """
+    from ..checkpoint.ckpt import latest_step
+
+    workdir = pathlib.Path(workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    repo_root = pathlib.Path(__file__).resolve().parents[3]
+    args = (default_train_args(workdir, steps=steps)
+            if train_args is None else list(train_args))
+    env = _worker_env(devices=n_workers, repo_root=repo_root)
+    logf = open(workdir / "workers.log", "w")
+    procs = []
+    try:
+        for i in range(n_workers):
+            cmd = [sys.executable, "-m", "repro.elastic.worker",
+                   "--member", f"w{i}", "--workdir", str(workdir),
+                   "--world", str(n_workers)] + args
+            procs.append(subprocess.Popen(
+                cmd, env=env, cwd=str(workdir), stdout=logf,
+                stderr=subprocess.STDOUT))
+        deadline = time.time() + timeout_s
+        ckpt_dir = workdir / "ckpt"
+
+        def leader_alive():
+            return any(p.poll() is None for j, p in enumerate(procs)
+                       if j != kill_index)
+
+        # phase 1: wait for training to checkpoint past the kill point.
+        # The default kill point is the step-0 checkpoint: step 1 is the
+        # slow donation-re-layout execution (seconds), so the victim's
+        # heartbeat goes stale and the monitor's step-boundary poll fires
+        # before the remaining (sub-100ms) steps can race past it.
+        while True:
+            s = latest_step(ckpt_dir)
+            if s is not None and s >= kill_after_step:
+                break
+            if not leader_alive():
+                raise RuntimeError(
+                    f"all candidate leaders exited before step "
+                    f"{kill_after_step} (see {workdir / 'workers.log'})")
+            if time.time() > deadline:
+                raise RuntimeError(
+                    f"no checkpoint at step >= {kill_after_step} within "
+                    f"{timeout_s:.0f}s (latest: {s})")
+            time.sleep(0.25)
+        victim = procs[kill_index]
+        victim.send_signal(signal.SIGKILL)
+        victim.wait()
+        t_kill = time.time()
+        log(f"killed worker w{kill_index} (pid {victim.pid}) after "
+            f"checkpoint step {latest_step(ckpt_dir)}")
+
+        # phase 2: wait for the survivors to finish the run
+        result_p = workdir / "result.json"
+        done_p = workdir / "DONE"
+        while not (done_p.exists() and result_p.exists()):
+            if not leader_alive() and not done_p.exists():
+                raise RuntimeError(
+                    f"survivors exited without completing the run (see "
+                    f"{workdir / 'workers.log'})")
+            if time.time() > deadline:
+                raise RuntimeError(
+                    f"no recovery within {timeout_s:.0f}s of launch")
+            time.sleep(0.25)
+        result = json.loads(result_p.read_text())
+        result["kill"] = {"member": f"w{kill_index}",
+                          "recover_s": round(time.time() - t_kill, 3)}
+        for j, p in enumerate(procs):
+            if j != kill_index:
+                try:
+                    p.wait(timeout=60)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+        result["exit_codes"] = [p.poll() for p in procs]
+        return result
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        logf.close()

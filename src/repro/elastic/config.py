@@ -1,0 +1,57 @@
+"""ElasticConfig: the frozen elastic-membership half of a RunSpec.
+
+Lives in its own module (no repro.api imports) so ``api.spec`` can embed
+it in RunSpec without a cycle, exactly like ``serving.config``: spec ->
+elastic.config only.  Field checks raise ValueError from
+``__post_init__`` — ``_from_dict`` wraps those in SpecError on the JSON
+path, and RunSpec.validate() adds the cross-field rules (``--elastic``
+needs a checkpoint dir and a sync backend with topology to re-derive).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic-membership runtime knobs.
+
+    ``enabled`` makes world size a runtime property: the session watches a
+    file/heartbeat membership registry at step boundaries and, when a pod
+    drops or joins, re-derives the collective topology and resumes from
+    the latest checkpoint on the new mesh shape.  ``dir`` is the registry
+    directory ("" = ``<ckpt.dir>/members``).  A member is considered dead
+    after ``timeout_s`` without a heartbeat (0 = 3 x ``heartbeat_s``).
+    ``allow_reshard`` permits ``--resume`` onto a different mesh shape
+    even with the elastic loop off (gate for the compatible-reshard
+    checkpoint path).  ``evict_after`` arms the StragglerWatchdog's
+    escalation: that many CONSECUTIVE straggler flags on the same rank
+    reports the member to the registry as suspect (0 = observe only).
+    """
+    enabled: bool = False
+    dir: str = ""             # membership registry ("" = <ckpt.dir>/members)
+    heartbeat_s: float = 1.0  # beat period; liveness poll granularity
+    timeout_s: float = 0.0    # declare-dead threshold (0 = 3 x heartbeat_s)
+    allow_reshard: bool = False
+    evict_after: int = 0      # watchdog flags before suspect-report (0 = off)
+
+    def __post_init__(self):
+        if self.heartbeat_s <= 0:
+            raise ValueError(f"elastic.heartbeat_s must be > 0, "
+                             f"got {self.heartbeat_s}")
+        if self.timeout_s < 0:
+            raise ValueError(f"elastic.timeout_s must be >= 0, "
+                             f"got {self.timeout_s}")
+        if self.evict_after < 0:
+            raise ValueError(f"elastic.evict_after must be >= 0, "
+                             f"got {self.evict_after}")
+
+    @property
+    def effective_timeout_s(self) -> float:
+        return self.timeout_s or 3.0 * self.heartbeat_s
+
+    def members_dir(self, ckpt_dir: str = "") -> str:
+        """Where the registry lives for a run checkpointing to
+        ``ckpt_dir`` (an explicit ``dir`` always wins)."""
+        return self.dir or os.path.join(ckpt_dir, "members")

@@ -1,0 +1,157 @@
+"""File/heartbeat membership registry.
+
+One JSON file per member in a shared directory — the lowest-common-
+denominator coordination substrate that works across the processes of a
+multi-process test without a rendezvous server (the hivemind-style
+monitor pattern: peers announce themselves and are presumed dead when
+their heartbeat goes stale).  All writes are atomic (tmp + os.replace),
+so a reader never sees a torn record.
+
+Liveness: a member is live iff its last beat is within ``timeout_s`` AND
+it has not been marked suspect since that beat.  ``suspect`` is the
+escalation hook the StragglerWatchdog uses — a suspect mark is a
+tombstone with a timestamp, cleared automatically by any LATER beat from
+the accused member (a recovered straggler re-admits itself).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+
+
+class Membership:
+    """Registry handle; optionally bound to one member identity.
+
+    >>> m = Membership("run/members", member="w0", heartbeat_s=0.5)
+    >>> m.join(); m.start_heartbeat()
+    >>> m.live()                       # ("w0", ...) across processes
+    >>> m.stop_heartbeat(); m.leave()
+
+    Observer use (no ``member``) supports ``live*``/``suspect`` only.
+    """
+
+    def __init__(self, direc, member: str | None = None,
+                 heartbeat_s: float = 1.0, timeout_s: float = 0.0):
+        self.dir = pathlib.Path(direc)
+        self.member = member
+        self.heartbeat_s = heartbeat_s
+        self.timeout_s = timeout_s or 3.0 * heartbeat_s
+        self._thread = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ writes
+    def _write(self, path: pathlib.Path, record: dict):
+        self.dir.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(record))
+        os.replace(tmp, path)
+
+    def _member_path(self, member: str) -> pathlib.Path:
+        return self.dir / f"{member}.json"
+
+    def join(self):
+        if self.member is None:
+            raise ValueError("observer Membership (member=None) cannot join")
+        now = time.time()
+        self._write(self._member_path(self.member),
+                    {"member": self.member, "pid": os.getpid(),
+                     "joined": now, "time": now})
+
+    def beat(self, now: float | None = None):
+        if self.member is None:
+            raise ValueError("observer Membership (member=None) cannot beat")
+        path = self._member_path(self.member)
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, ValueError):
+            rec = {"member": self.member, "pid": os.getpid(),
+                   "joined": time.time()}
+        rec["time"] = time.time() if now is None else now
+        self._write(path, rec)
+
+    def leave(self):
+        if self.member is None:
+            return
+        self.stop_heartbeat()
+        for p in (self._member_path(self.member),
+                  self.dir / f"{self.member}.suspect"):
+            try:
+                p.unlink()
+            except OSError:
+                pass
+
+    def suspect(self, member: str, reason: str = ""):
+        """Mark ``member`` suspect (straggler escalation).  Cleared by any
+        later beat from the member itself."""
+        self._write(self.dir / f"{member}.suspect",
+                    {"member": member, "time": time.time(),
+                     "reason": reason,
+                     "by": self.member or f"pid{os.getpid()}"})
+
+    # ------------------------------------------------------------ reads
+    def members(self) -> dict:
+        """All registered member records (live or not), by member id."""
+        out = {}
+        if not self.dir.exists():
+            return out
+        for p in sorted(self.dir.glob("*.json")):
+            try:
+                rec = json.loads(p.read_text())
+            except (OSError, ValueError):
+                continue  # torn/vanished file: skip this poll
+            if isinstance(rec, dict) and "member" in rec:
+                out[rec["member"]] = rec
+        return out
+
+    def _suspect_time(self, member: str) -> float | None:
+        p = self.dir / f"{member}.suspect"
+        try:
+            return float(json.loads(p.read_text())["time"])
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+    def live_members(self, now: float | None = None) -> dict:
+        """Member records whose heartbeat is fresh and not suspect-marked
+        since that beat."""
+        now = time.time() if now is None else now
+        out = {}
+        for member, rec in self.members().items():
+            beat = float(rec.get("time", 0.0))
+            if now - beat > self.timeout_s:
+                continue
+            sus = self._suspect_time(member)
+            if sus is not None and sus >= beat:
+                continue
+            out[member] = rec
+        return out
+
+    def live(self, now: float | None = None) -> tuple:
+        """Sorted live member ids — the canonical world enumeration.
+        Rank = index into this tuple; the lowest id is the leader."""
+        return tuple(sorted(self.live_members(now)))
+
+    # ------------------------------------------------------------ heartbeat
+    def start_heartbeat(self):
+        """Beat from a daemon thread every ``heartbeat_s`` (idempotent)."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(self.heartbeat_s):
+                try:
+                    self.beat()
+                except OSError:
+                    pass  # registry dir may vanish at teardown
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop_heartbeat(self):
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=2 * self.heartbeat_s)
+            self._thread = None

@@ -1,0 +1,215 @@
+"""ElasticTrainSession: detect -> re-derive -> reshard-resume loop.
+
+World size becomes a runtime property: an inner ``TrainSession`` trains
+on the CURRENT topology while a ``MembershipMonitor`` callback polls the
+registry at step boundaries.  When the live set changes enough to change
+the derived topology, the monitor requests a stop — PeriodicCheckpoint
+(which treats a requested stop like a final step) persists the very step
+the change was detected on — and the outer loop:
+
+  1. re-derives the cascade ``(pods, dp)`` axes from the live count
+     (``topology.derive_topology``; the 1/N carry grid and the
+     ``bytes_on_wire``/``time_on_wire`` inputs follow from the new N
+     through ``RunSpec.resolved_sync`` and ``api.build``),
+  2. re-warms the photonic runtime for the new N1 — the ONN cache keys
+     on (PhotonicsConfig, bits, n_servers), so a previously-seen group
+     size is a cache HIT, not a rebuild,
+  3. rebuilds the inner session with ``ckpt.resume`` — the compatible-
+     reshard restore re-places the saved global arrays onto the new
+     mesh's NamedShardings, re-zeroes error-feedback residuals whose
+     bucketization changed, and the (step-pure) data pipeline continues
+     at the right sample offset,
+
+then keeps training until ``spec.steps`` or an unrecoverable membership
+loss (fewer survivors than one full pod -> ElasticError).
+
+``session.events`` records one dict per membership epoch transition
+(old/new topology, live set, modeled wire bytes/time) — the chaos test
+and ``benchmarks/elastic.py`` read it to assert recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from .membership import Membership
+from .topology import ElasticError, derive_topology
+
+
+class MembershipMonitor:
+    """Callback that turns registry changes into a session stop request.
+
+    Polls at most once per ``heartbeat_s`` (the registry cannot change
+    faster than members beat).  A change that does not change the derived
+    topology (e.g. a spare joining an already-full world) is recorded but
+    does not interrupt training.
+    """
+
+    def __init__(self, membership: Membership, base_mesh,
+                 heartbeat_s: float = 1.0):
+        self.membership = membership
+        self.base_mesh = base_mesh
+        self.heartbeat_s = heartbeat_s
+        self.live = None            # live set at session start (lazy)
+        self.new_mesh = None        # derived topology after the change
+        self.changed = False
+        self.fatal = None           # ElasticError when below one pod
+        self._last_poll = 0.0
+        self.detected_step = None
+        self.detected_at = None
+
+    # Callback protocol (duck-typed: api.callbacks.Callback has the same
+    # hook names; no repro.api import needed here)
+    def on_train_start(self, session):
+        if self.live is None:
+            self.live = self.membership.live()
+
+    def on_step(self, session, record):
+        now = time.time()
+        if now - self._last_poll < self.heartbeat_s:
+            return
+        self._last_poll = now
+        live = self.membership.live()
+        if live == self.live:
+            return
+        self.live = live
+        try:
+            mesh = derive_topology(len(live), self.base_mesh)
+        except ElasticError as e:
+            self.fatal = e
+            session.request_stop()
+            return
+        if mesh != session.spec.mesh:
+            self.changed = True
+            self.new_mesh = mesh
+            self.detected_step = record["step"]
+            self.detected_at = now
+            record["membership_change"] = list(live)
+            session.request_stop()
+
+    def on_step_end(self, session, record):
+        self.on_step(session, record)
+
+    def on_checkpoint(self, session, step):
+        pass
+
+    def on_membership_change(self, old_mesh, new_mesh, step):
+        pass
+
+    def on_train_end(self, session):
+        pass
+
+
+class ElasticTrainSession:
+    """Train one RunSpec with membership-elastic topology.
+
+    >>> spec = RunSpec(..., elastic=ElasticConfig(enabled=True), ...)
+    >>> session = ElasticTrainSession(spec)
+    >>> history = session.run()     # spans membership epochs
+    >>> session.events              # one dict per topology transition
+    """
+
+    def __init__(self, spec, callbacks: list | None = None,
+                 membership: Membership | None = None):
+        from ..api.spec import SpecError
+        spec.validate()
+        if not spec.elastic.enabled:
+            raise SpecError("ElasticTrainSession needs elastic.enabled "
+                            "(--elastic); use TrainSession for static runs")
+        self.spec = spec
+        self.base_mesh = spec.mesh
+        e = spec.elastic
+        self.membership = membership if membership is not None else \
+            Membership(e.members_dir(spec.ckpt.dir),
+                       heartbeat_s=e.heartbeat_s, timeout_s=e.timeout_s)
+        self.user_callbacks = list(callbacks) if callbacks else []
+        self.events = []
+        self.session = None          # current inner TrainSession
+        self.history = []
+
+    # ------------------------------------------------------------ quorum
+    def wait_for_quorum(self, want: int | None = None,
+                        grace_s: float | None = None) -> tuple:
+        """Block until the full base world (or ``want`` members) is live,
+        or until ``grace_s`` passes with at least one full pod.  Raises
+        ElasticError if even one pod never forms."""
+        e = self.spec.elastic
+        want = (self.base_mesh.pods * self.base_mesh.dp
+                if want is None else want)
+        grace = (max(10.0 * e.heartbeat_s, 5.0)
+                 if grace_s is None else grace_s)
+        deadline = time.time() + grace
+        while True:
+            live = self.membership.live()
+            if len(live) >= want:
+                return live
+            if time.time() >= deadline:
+                if len(live) >= self.base_mesh.dp:
+                    return live
+                raise ElasticError(
+                    f"no quorum after {grace:.1f}s: live={live!r}, need at "
+                    f"least one full pod of dp={self.base_mesh.dp}")
+            time.sleep(min(e.heartbeat_s, 0.2))
+
+    # ------------------------------------------------------------ the loop
+    def _epoch_spec(self, mesh):
+        resume = False
+        if self.spec.ckpt.dir:
+            from ..checkpoint.ckpt import latest_step
+            resume = latest_step(self.spec.ckpt.dir) is not None
+        return dataclasses.replace(
+            self.spec, mesh=mesh,
+            ckpt=dataclasses.replace(self.spec.ckpt, resume=resume))
+
+    def _event(self, old_spec, new_spec, step, live, drain_s):
+        from ..api import build
+        # topologies as (pods, dp) — the cascade's two-level split
+        ev = {"step": step, "live": list(live),
+              "old_topology": [old_spec.mesh.pods, old_spec.mesh.dp],
+              "new_topology": [new_spec.mesh.pods, new_spec.mesh.dp],
+              "n": new_spec.mesh.pods * new_spec.mesh.dp,
+              "n1": new_spec.mesh.dp,
+              "drain_s": round(drain_s, 3),
+              "bytes_on_wire": build.modeled_bytes_on_wire(new_spec),
+              "time_on_wire": build.modeled_time_on_wire(new_spec)}
+        return ev
+
+    def run(self, n_steps: int | None = None) -> list:
+        from ..api.callbacks import default_callbacks
+        from ..api.session import TrainSession
+        e = self.spec.elastic
+        live = self.wait_for_quorum()
+        mesh = derive_topology(len(live), self.base_mesh)
+        while True:
+            spec_i = self._epoch_spec(mesh)
+            monitor = MembershipMonitor(self.membership, self.base_mesh,
+                                        heartbeat_s=e.heartbeat_s)
+            monitor.live = live
+            # monitor FIRST: it must see the step before PeriodicCheckpoint
+            # decides whether this is a stop-step worth persisting
+            cbs = ([monitor]
+                   + default_callbacks(spec_i, membership=self.membership)
+                   + self.user_callbacks)
+            inner = TrainSession(spec_i, callbacks=cbs)
+            self.session = inner
+            self.history += inner.run(n_steps)
+            if monitor.fatal is not None:
+                raise monitor.fatal
+            done = inner.step >= self.spec.steps or not monitor.changed
+            if done:
+                return self.history
+            # topology changed mid-run: re-derive from the CURRENT live
+            # set (it may have shifted again while the epoch drained)
+            live = self.membership.live()
+            new_mesh = derive_topology(len(live), self.base_mesh)
+            drain_s = (time.time() - monitor.detected_at
+                       if monitor.detected_at else 0.0)
+            new_spec = self._epoch_spec(new_mesh)
+            ev = self._event(spec_i, new_spec, inner.step, live, drain_s)
+            self.events.append(ev)
+            print(f"membership change at step {monitor.detected_step}: "
+                  f"{ev['old_topology']} -> {ev['new_topology']} "
+                  f"(live={ev['live']})", flush=True)
+            for cb in self.user_callbacks:
+                cb.on_membership_change(spec_i.mesh, new_mesh, inner.step)
+            mesh = new_mesh

@@ -1,0 +1,41 @@
+"""Live-membership -> mesh-topology derivation.
+
+The cascade's two-level split is (pods, dp): member ``i`` of the sorted
+live enumeration sits in pod ``i // dp``, and a pod is usable only when
+ALL of its ``dp`` workers are live — one dead worker drains the whole
+pod (its level-1 OptINC group cannot form).  ``derive_topology`` is
+therefore a floor-division: the survivors re-form
+``min(base.pods, n_live // base.dp)`` full pods, capped at the
+configured base (joins beyond the base world are spares, not growth
+past the provisioned fabric).
+
+Duck-typed over any dataclass with ``pods``/``dp`` fields (MeshSpec) so
+this module needs no repro.api import.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class ElasticError(RuntimeError):
+    """The live membership cannot form any valid topology."""
+
+
+def derive_topology(n_live: int, base_mesh):
+    """The mesh the ``n_live`` survivors re-form, given the run's base
+    (maximum) topology.  Returns ``base_mesh`` itself when nothing
+    changes; raises ElasticError below one full pod."""
+    pods = min(base_mesh.pods, n_live // base_mesh.dp)
+    if pods < 1:
+        raise ElasticError(
+            f"{n_live} live member(s) cannot form one full pod of "
+            f"dp={base_mesh.dp} (base topology ({base_mesh.pods}, "
+            f"{base_mesh.dp}))")
+    if pods == base_mesh.pods:
+        return base_mesh
+    return dataclasses.replace(base_mesh, pods=pods)
+
+
+def member_pod(rank: int, base_mesh) -> int:
+    """Which pod the member at sorted-live index ``rank`` belongs to."""
+    return rank // base_mesh.dp

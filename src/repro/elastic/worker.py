@@ -1,0 +1,128 @@
+"""Per-process elastic pod agent.
+
+  PYTHONPATH=src python -m repro.elastic.worker --member w0 \
+      --workdir results/elastic_run --world 4 \
+      --arch minitron_4b --smoke-config --sync cascade --mesh 2x1 \
+      --elastic --allow-reshard --ckpt-dir results/elastic_run/ckpt ...
+
+Every process joins the file/heartbeat registry under ``--members-dir``
+(default ``<workdir>/members``) and beats from a daemon thread.  The
+LOWEST live member id is the leader: it runs the ElasticTrainSession
+(training the whole emulated device mesh in-process — the repo's
+emulation model keeps all "N devices" in one process, so followers are
+membership participants, not compute shards).  Followers idle-beat and
+watch for the DONE marker; if the leader dies, the next-lowest live
+member takes over and resumes from the shared checkpoint directory —
+leader failover IS a reshard-resume.
+
+On completion the leader writes ``<workdir>/result.json`` (history,
+membership events, state fingerprint) and the ``DONE`` marker that
+releases the followers.  ``chaos.run_chaos`` SIGKILLs one of these
+processes mid-run and asserts the survivors recover.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+
+def build_spec(ns: dict, workdir: pathlib.Path):
+    from ..api.spec import RunSpec
+    import dataclasses
+    base = (RunSpec.load(ns.pop("spec")) if "spec" in ns else RunSpec())
+    spec = base.apply_cli(ns)
+    if not spec.ckpt.dir:
+        spec = dataclasses.replace(
+            spec, ckpt=dataclasses.replace(
+                spec.ckpt, dir=str(workdir / "ckpt")))
+    if not spec.elastic.dir:
+        spec = dataclasses.replace(
+            spec, elastic=dataclasses.replace(
+                spec.elastic, dir=str(workdir / "members")))
+    return spec.validate()
+
+
+def main(argv=None) -> int:
+    from ..api.spec import RunSpec, SpecError
+    from .membership import Membership
+
+    ap = argparse.ArgumentParser(
+        description=__doc__, argument_default=argparse.SUPPRESS,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--member", required=True,
+                    help="this process's registry identity (e.g. w0)")
+    ap.add_argument("--workdir", required=True,
+                    help="shared run directory (registry, checkpoints, "
+                         "result.json, DONE marker)")
+    ap.add_argument("--world", type=int, default=0,
+                    help="expected initial member count (wait for all of "
+                         "them before electing a leader; 0 = don't wait)")
+    RunSpec.add_args(ap)
+    ns = vars(ap.parse_args(argv))
+    member = ns.pop("member")
+    workdir = pathlib.Path(ns.pop("workdir"))
+    world = ns.pop("world", 0)
+    workdir.mkdir(parents=True, exist_ok=True)
+
+    try:
+        spec = build_spec(ns, workdir)
+    except SpecError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    e = spec.elastic
+    mem = Membership(e.members_dir(spec.ckpt.dir), member=member,
+                     heartbeat_s=e.heartbeat_s, timeout_s=e.timeout_s)
+    mem.join()
+    mem.start_heartbeat()
+    done_marker = workdir / "DONE"
+    try:
+        # hold leadership checks until the expected world assembles (or a
+        # grace period passes) so a fast-starting high-id member does not
+        # crown itself before w0 arrives
+        deadline = time.time() + max(10.0 * e.heartbeat_s, 5.0)
+        while world and len(mem.live()) < world and time.time() < deadline:
+            time.sleep(min(e.heartbeat_s, 0.2))
+        while not done_marker.exists():
+            live = mem.live()
+            if live and live[0] == member:
+                return _lead(spec, mem, workdir, done_marker)
+            time.sleep(min(e.heartbeat_s, 0.5))
+        return 0
+    finally:
+        mem.leave()
+
+
+def _lead(spec, mem, workdir: pathlib.Path, done_marker: pathlib.Path) -> int:
+    from .session import ElasticTrainSession
+    from .topology import ElasticError
+
+    print(f"{mem.member}: leading (live={mem.live()!r})", flush=True)
+    session = ElasticTrainSession(spec, membership=mem)
+    code = 0
+    try:
+        history = session.run()
+        result = {
+            "leader": mem.member,
+            "final_step": session.session.step if session.session else 0,
+            "history": history,
+            "events": session.events,
+            "state_fingerprint": spec.state_fingerprint(),
+        }
+    except ElasticError as err:
+        print(f"unrecoverable membership loss: {err}", file=sys.stderr)
+        result = {"leader": mem.member, "error": str(err),
+                  "history": [], "events": session.events,
+                  "state_fingerprint": spec.state_fingerprint()}
+        code = 3
+    tmp = workdir / "result.json.tmp"
+    tmp.write_text(json.dumps(result, indent=1))
+    tmp.replace(workdir / "result.json")
+    done_marker.write_text(mem.member)
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,20 @@
       --smoke-config --sync optinc --bits 2 --fidelity mesh \
       --theta-drift-std 0.02 --shot-noise-std 0.01
 
+  # elastic membership: world size becomes a runtime property — the run
+  # watches the member registry, re-derives the cascade topology when a
+  # pod drops/joins, and reshard-resumes from the last checkpoint
+  # (multi-process agents: python -m repro.elastic.worker)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync cascade --mesh 2x1 --elastic \
+      --ckpt-dir results/ckpt/elastic --ckpt-every 1
+
+  # resume a checkpoint on a DIFFERENT mesh shape (compatible-reshard:
+  # global state re-placed, error-feedback residuals re-bucketized)
+  PYTHONPATH=src python -m repro.launch.train --arch paper_llama \
+      --smoke-config --sync cascade --mesh 2x1 --pods 1 \
+      --ckpt-dir results/ckpt/elastic --resume --allow-reshard
+
   # or describe the whole scenario declaratively:
   PYTHONPATH=src python -m repro.launch.train --spec my_run.json
 
@@ -60,7 +74,31 @@ from repro.api import RunSpec, SpecError, TrainSession
 def main(argv=None):
     try:
         spec = RunSpec.from_args(argv, description=__doc__)
-        TrainSession(spec).run()
+        if spec.elastic.enabled:
+            from repro.elastic import ElasticTrainSession, Membership
+            # Single-process elastic run: this process owns the whole
+            # mesh, so it self-hosts the registry — one member per rank,
+            # all beating from here.  The world forms immediately;
+            # membership changes come from suspect tombstones (watchdog
+            # --evict-after escalation, or an operator touching
+            # <member>.suspect) or from extra agents joining the dir.
+            # Multi-process runs use repro.elastic.worker instead, where
+            # each process is ONE member and SIGKILL = going stale.
+            e = spec.elastic
+            ranks = [Membership(e.members_dir(spec.ckpt.dir),
+                                member=f"w{i}", heartbeat_s=e.heartbeat_s,
+                                timeout_s=e.timeout_s)
+                     for i in range(spec.mesh.pods * spec.mesh.dp)]
+            for m in ranks:
+                m.join()
+                m.start_heartbeat()
+            try:
+                ElasticTrainSession(spec, membership=ranks[0]).run()
+            finally:
+                for m in ranks:
+                    m.stop_heartbeat()
+        else:
+            TrainSession(spec).run()
     except SpecError as e:
         raise SystemExit(f"error: {e}")
     return 0

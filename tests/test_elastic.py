@@ -1,0 +1,281 @@
+"""repro.elastic: membership registry, topology derivation, the
+ResumeCompat verdict surface, the ElasticConfig spec/CLI round-trip, the
+watchdog suspect-escalation, the ONN-cache warm path across a shrink,
+and the single-axis (N2 == 1) cascade degrade.
+
+The multi-process chaos run and the subprocess reshard-resume round-trip
+live in test_elastic_chaos.py (slow)."""
+import dataclasses
+import time
+
+import pytest
+
+from repro.api import (CheckpointConfig, ElasticConfig, MeshSpec,
+                       ResumeCompat, RunSpec, SpecError, SpecMismatchError,
+                       StragglerWatchdog, SyncConfig, check_resume_compat,
+                       default_callbacks, validate_resume_compat)
+from repro.elastic import ElasticError, Membership, derive_topology, \
+    member_pod
+
+
+def tiny_spec(**kw):
+    base = dict(arch="minitron_4b", smoke=True, steps=4)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ------------------------------------------------------------ membership
+def test_membership_join_beat_live(tmp_path):
+    a = Membership(tmp_path, member="w0", heartbeat_s=0.1)
+    b = Membership(tmp_path, member="w1", heartbeat_s=0.1)
+    a.join()
+    b.join()
+    obs = Membership(tmp_path, heartbeat_s=0.1)   # observer handle
+    assert obs.live() == ("w0", "w1")
+    # liveness is a time window: a stale beat drops the member
+    now = time.time()
+    assert obs.live(now=now + 10.0) == ()
+    a.beat(now=now + 10.0)
+    assert obs.live(now=now + 10.0) == ("w0",)
+    a.leave()
+    assert obs.live(now=now + 10.0) == ()
+
+
+def test_membership_observer_cannot_join(tmp_path):
+    with pytest.raises(ValueError, match="observer"):
+        Membership(tmp_path).join()
+
+
+def test_membership_suspect_and_clear(tmp_path):
+    w = Membership(tmp_path, member="w0", heartbeat_s=0.1)
+    w.join()
+    obs = Membership(tmp_path, member="leader", heartbeat_s=0.1)
+    obs.suspect("w0", reason="straggling")
+    assert "w0" not in obs.live()
+    # a LATER beat from the accused member re-admits it
+    time.sleep(0.02)
+    w.beat()
+    assert "w0" in obs.live()
+
+
+def test_membership_heartbeat_thread(tmp_path):
+    w = Membership(tmp_path, member="w0", heartbeat_s=0.05)
+    w.join()
+    w.start_heartbeat()
+    try:
+        first = w.members()["w0"]["time"]
+        deadline = time.time() + 2.0
+        while time.time() < deadline:
+            if w.members()["w0"]["time"] > first:
+                break
+            time.sleep(0.02)
+        assert w.members()["w0"]["time"] > first
+    finally:
+        w.stop_heartbeat()
+
+
+# ------------------------------------------------------------ topology
+def test_derive_topology_matrix():
+    base = MeshSpec(dp=2, tp=1, pods=2)
+    assert derive_topology(4, base) is base            # full world
+    assert derive_topology(5, base) is base            # spares don't grow
+    assert derive_topology(3, base).pods == 1          # one pod drained
+    assert derive_topology(2, base).pods == 1
+    shrunk = derive_topology(2, base)
+    assert (shrunk.dp, shrunk.tp) == (2, 1)            # dp/tp untouched
+    with pytest.raises(ElasticError, match="full pod"):
+        derive_topology(1, base)
+    assert [member_pod(i, base) for i in range(4)] == [0, 0, 1, 1]
+
+
+# ------------------------------------------------------------ ResumeCompat
+def test_resume_compat_verdict_matrix():
+    spec = tiny_spec(mesh=MeshSpec(dp=2, pods=2))
+    # exact: non-structural fields may drift freely
+    tweaked = dataclasses.replace(
+        spec, steps=99, optim=dataclasses.replace(spec.optim, lr=5e-5))
+    v = check_resume_compat(spec, tweaked)
+    assert (v.verdict, v.ok, v.state_diff, v.shape_diff) == \
+        ("exact", True, (), ())
+    # reshardable: only the mesh moved
+    shrunk = dataclasses.replace(
+        spec, mesh=dataclasses.replace(spec.mesh, pods=1))
+    v = check_resume_compat(spec, shrunk)
+    assert (v.verdict, v.ok) == ("reshardable", True)
+    assert v.shape_diff == ("mesh",) and not v.state_diff
+    assert "mesh" in v.detail
+    # incompatible: state-structure fields differ — named in the verdict
+    other = dataclasses.replace(
+        spec, optim=dataclasses.replace(spec.optim, moment_dtype="bfloat16"))
+    v = check_resume_compat(spec, other)
+    assert (v.verdict, v.ok) == ("incompatible", False)
+    assert "moment_dtype" in v.state_diff
+
+
+def test_validate_resume_compat_gating():
+    spec = tiny_spec(mesh=MeshSpec(dp=2, pods=2))
+    shrunk = dataclasses.replace(
+        spec, mesh=dataclasses.replace(spec.mesh, pods=1))
+    # mesh change without consent: raises, pointing at the gate flag
+    with pytest.raises(SpecMismatchError, match="allow-reshard"):
+        validate_resume_compat(spec, shrunk)
+    v = validate_resume_compat(spec, shrunk, allow_reshard=True)
+    assert isinstance(v, ResumeCompat) and v.verdict == "reshardable"
+    # incompatible raises REGARDLESS of allow_reshard (unchanged contract)
+    other = dataclasses.replace(
+        spec, sync=dataclasses.replace(spec.sync, error_feedback=True))
+    with pytest.raises(SpecMismatchError, match="error_feedback"):
+        validate_resume_compat(spec, other, allow_reshard=True)
+
+
+def test_fingerprint_split_covers_legacy():
+    spec = tiny_spec()
+    merged = {**spec.state_fingerprint(), **spec.shape_fingerprint()}
+    assert merged == spec.compat_fingerprint()
+    assert set(spec.state_fingerprint()) & set(spec.shape_fingerprint()) \
+        == set()
+    assert "mesh" in spec.shape_fingerprint()
+    for k in ("arch", "smoke", "moment_dtype", "error_feedback"):
+        assert k in spec.state_fingerprint()
+
+
+# ------------------------------------------------------------ spec surface
+def test_elastic_config_json_and_cli_roundtrip(tmp_path):
+    spec = tiny_spec(
+        elastic=ElasticConfig(enabled=True, dir="m", heartbeat_s=0.5,
+                              timeout_s=2.0, allow_reshard=True,
+                              evict_after=3),
+        ckpt=CheckpointConfig(dir=str(tmp_path)))
+    assert RunSpec.from_json(spec.to_json()) == spec
+    cli = RunSpec().apply_cli(
+        {"elastic": True, "heartbeat_s": 0.5, "allow_reshard": True,
+         "members_dir": "m", "evict_after": 3,
+         "ckpt_dir": str(tmp_path)})
+    assert cli.elastic == ElasticConfig(enabled=True, dir="m",
+                                        heartbeat_s=0.5, allow_reshard=True,
+                                        evict_after=3)
+    # default registry location hangs off the checkpoint dir
+    assert ElasticConfig().members_dir("/ck") == "/ck/members"
+    assert ElasticConfig(dir="/m").members_dir("/ck") == "/m"
+
+
+def test_elastic_validation_rules(tmp_path):
+    # psum has no topology to re-derive
+    with pytest.raises(SpecError, match="psum"):
+        tiny_spec(sync=SyncConfig(mode="psum"),
+                  elastic=ElasticConfig(enabled=True),
+                  ckpt=CheckpointConfig(dir=str(tmp_path))).validate()
+    # elastic resumes from checkpoints: ckpt.dir required
+    with pytest.raises(SpecError, match="ckpt-dir"):
+        tiny_spec(elastic=ElasticConfig(enabled=True)).validate()
+    # static cascade still needs two pods...
+    with pytest.raises(SpecError, match="pod"):
+        tiny_spec(sync=SyncConfig(mode="cascade")).validate()
+    # ...but an elastic (or reshard-consenting) run may shrink to one
+    tiny_spec(sync=SyncConfig(mode="cascade"),
+              elastic=ElasticConfig(allow_reshard=True)).validate()
+    tiny_spec(sync=SyncConfig(mode="cascade"),
+              elastic=ElasticConfig(enabled=True),
+              ckpt=CheckpointConfig(dir=str(tmp_path))).validate()
+    with pytest.raises(ValueError, match="heartbeat_s"):
+        ElasticConfig(heartbeat_s=0)
+
+
+# ------------------------------------------------------------ watchdog
+class _FakeMembership:
+    def __init__(self):
+        self.calls = []
+
+    def suspect(self, member, reason=""):
+        self.calls.append((member, reason))
+
+
+def test_watchdog_escalates_after_consecutive_flags():
+    mem = _FakeMembership()
+    wd = StragglerWatchdog(factor=2.0, window=50, warmup=3, evict_after=2,
+                           membership=mem, member="w1")
+    for _ in range(6):
+        wd.on_step_end(None, {"time_s": 0.1})
+    wd.on_step_end(None, {"time_s": 5.0})        # flag 1: streak 1
+    assert mem.calls == []
+    rec = {"time_s": 5.0}
+    wd.on_step_end(None, rec)                    # flag 2: escalate
+    assert [c[0] for c in mem.calls] == ["w1"]
+    assert "consecutive" in mem.calls[0][1]
+    assert rec["suspected"] == "w1"
+    wd.on_step_end(None, {"time_s": 5.0})        # already reported: once
+    assert len(mem.calls) == 1
+
+
+def test_watchdog_clean_step_resets_streak():
+    mem = _FakeMembership()
+    wd = StragglerWatchdog(factor=2.0, window=50, warmup=3, evict_after=2,
+                           membership=mem, member="w1")
+    for _ in range(6):
+        wd.on_step_end(None, {"time_s": 0.1})
+    wd.on_step_end(None, {"time_s": 5.0})        # streak 1
+    wd.on_step_end(None, {"time_s": 0.1})        # clean: reset
+    wd.on_step_end(None, {"time_s": 5.0})        # streak 1 again
+    assert mem.calls == []
+    # per-rank streaks: a different rank's flag is its own streak
+    wd.on_step_end(None, {"time_s": 5.0, "rank": "w2"})
+    assert mem.calls == []
+
+
+def test_watchdog_legacy_direct_call_still_works():
+    # tests/test_callbacks.py-style direct on_step_end invocation (the
+    # base class aliases it to on_step)
+    wd = StragglerWatchdog(factor=3.0, warmup=1)
+    for t in (0.1, 0.1, 0.1, 9.0):
+        rec = {"time_s": t}
+        wd.on_step_end(None, rec)
+    assert rec.get("straggler") and wd.n_flagged == 1
+
+
+def test_default_callbacks_arm_escalation():
+    mem = _FakeMembership()
+    spec = tiny_spec(elastic=ElasticConfig(evict_after=4))
+    wd = default_callbacks(spec, membership=mem)[0]
+    assert isinstance(wd, StragglerWatchdog)
+    assert wd.evict_after == 4 and wd.membership is mem
+
+
+# ------------------------------------------------------------ ONN cache
+def test_onn_runtime_cache_warm_across_shrink():
+    """Re-deriving the topology for a previously-seen N1 is a cache HIT:
+    the (2,2) warmup resolves N=4 and N1=2 modules; shrinking to (1,2)
+    needs only N=2 — already resolved."""
+    from repro.api import build
+    from repro.photonics import PhotonicsConfig, runtime
+
+    spec = tiny_spec(mesh=MeshSpec(dp=2, pods=2),
+                     sync=SyncConfig(mode="cascade", bits=2,
+                                     photonics=PhotonicsConfig(
+                                         fidelity="onn")),
+                     elastic=ElasticConfig(allow_reshard=True))
+    build.warmup_photonics(spec)
+    before = dict(runtime._CACHE)
+    m_before = runtime.get_module(spec.sync.photonics, 2, 2)
+    shrunk = dataclasses.replace(
+        spec, mesh=dataclasses.replace(spec.mesh, pods=1))
+    build.warmup_photonics(shrunk)
+    assert dict(runtime._CACHE) == before          # no new modules built
+    assert runtime.get_module(spec.sync.photonics, 2, 2) is m_before
+
+
+# ------------------------------------------------------------ wire model
+def test_modeled_wire_shrinks_with_topology():
+    from repro.api import build
+    base = tiny_spec(mesh=MeshSpec(dp=2, pods=2),
+                     sync=SyncConfig(mode="cascade"),
+                     elastic=ElasticConfig(allow_reshard=True))
+    shrunk = dataclasses.replace(
+        base, mesh=dataclasses.replace(base.mesh, pods=1))
+    b_full = build.modeled_bytes_on_wire(base)
+    b_one = build.modeled_bytes_on_wire(shrunk)
+    assert 0 < b_one < b_full       # dropping the carry link sheds bytes
+    # the degenerate (single-pod) cascade prices exactly like optinc
+    opt = dataclasses.replace(shrunk, sync=SyncConfig(mode="optinc"))
+    assert b_one == build.modeled_bytes_on_wire(opt)
+    assert build.modeled_time_on_wire(shrunk) == \
+        build.modeled_time_on_wire(opt)

@@ -1,0 +1,186 @@
+"""Elastic end-to-end: chaos kill/recover and reshard-resume round trips.
+
+Multi-process counterparts to tests/test_elastic.py.  The chaos test is
+the PR's headline proof: four workers over a (pods=2, dp=2) cascade,
+one SIGKILLed mid-run; the survivors must re-derive the (1, 2) topology
+and keep the loss descending through the reshard-resume.  The CLI tests
+exercise the same reshard path through repro.launch.train directly:
+(2, 2) -> (1, 2) re-zeroes the error-feedback residuals (bucketization
+changed), (1, 2) -> (2, 1)-shaped mesh on the same device count restores
+them, and a mesh change WITHOUT --allow-reshard is refused with a
+SpecMismatchError that names the flag.
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+def run_train(args, timeout=900, devices=4, expect_fail=False):
+    from conftest import subprocess_env
+    env = subprocess_env(
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if expect_fail:
+        assert r.returncode != 0, r.stdout[-2000:]
+        return r
+    assert r.returncode == 0, r.stderr[-3000:]
+    recs = [json.loads(l) for l in r.stdout.splitlines()
+            if l.startswith("{")]
+    return r, recs
+
+
+@pytest.mark.slow
+def test_chaos_kill_one_pod_recovers(tmp_path):
+    """SIGKILL one of four workers after the step-0 checkpoint: survivors
+    re-form as one pod of dp=2 and finish the run with descending loss."""
+    from repro.elastic.chaos import run_chaos
+
+    result = run_chaos(tmp_path / "chaos", n_workers=4, kill_index=3,
+                       kill_after_step=0, steps=12, timeout_s=840.0,
+                       log=lambda *a: None)
+    assert result.get("error") is None, result
+    events = result["events"]
+    assert len(events) == 1, events
+    ev = events[0]
+    assert ev["old_topology"] == [2, 2]
+    assert ev["new_topology"] == [1, 2]
+    assert ev["n"] == 2 and ev["n1"] == 2
+    assert sorted(ev["live"]) == ["w0", "w1", "w2"]
+    history = result["history"]
+    assert history[-1]["step"] == 11
+    losses = [r["loss"] for r in history]
+    assert all(l == l and abs(l) != float("inf") for l in losses)
+    post = [r["loss"] for r in history if r["step"] >= ev["step"]]
+    assert len(post) >= 2 and post[-1] < post[0], post
+    # the reshard changed WHERE the state lives, never what it means
+    from repro.api import RunSpec
+    assert result["state_fingerprint"] == \
+        RunSpec(arch="minitron_4b", smoke=True).state_fingerprint()
+    # the victim died by SIGKILL; every survivor exited cleanly
+    codes = result["exit_codes"]
+    assert codes[3] == -9 and all(c == 0 for i, c in enumerate(codes)
+                                  if i != 3), codes
+    # shrinking the world shrinks the modeled wire cost
+    import dataclasses
+    from repro.api import MeshSpec, RunSpec, SyncConfig, build
+    base = RunSpec(arch="minitron_4b", smoke=True,
+                   mesh=MeshSpec(pods=2, dp=2),
+                   sync=SyncConfig(mode="cascade"))
+    shrunk = dataclasses.replace(
+        base, mesh=dataclasses.replace(base.mesh, pods=1))
+    assert (build.modeled_bytes_on_wire(shrunk)
+            < build.modeled_bytes_on_wire(base))
+
+
+@pytest.mark.slow
+def test_reshard_resume_round_trip(tmp_path):
+    """(2,2) cascade -> (1,2) reshard (residuals re-zeroed) -> back to a
+    4-device mesh (residual shapes match again; no re-zero message).
+    Loss descends across all three leg boundaries."""
+    ckpt = str(tmp_path / "ckpt")
+    base = ["--arch", "minitron_4b", "--smoke-config", "--sync", "cascade",
+            "--error-feedback", "--global-batch", "4", "--seq-len", "32",
+            "--lr", "1e-3", "--bucket-mb", "1", "--ckpt-dir", ckpt,
+            "--ckpt-every", "1"]
+    _, first = run_train(base + ["--mesh", "2x1", "--pods", "2",
+                                 "--steps", "3"])
+    r2, second = run_train(base + ["--mesh", "2x1", "--pods", "1",
+                                   "--steps", "6", "--resume",
+                                   "--allow-reshard"])
+    # bucketization changed (4 devices -> 2): residuals re-zeroed, loudly
+    assert "residuals re-zeroed" in r2.stdout, r2.stdout[-2000:]
+    assert "resharded" in r2.stdout
+    assert min(r["step"] for r in second) == 3   # resumed, not restarted
+    r3, third = run_train(base + ["--mesh", "1x1", "--pods", "2",
+                                  "--steps", "9", "--resume",
+                                  "--allow-reshard"], devices=2)
+    # same flat device count (2) as the previous leg: residual bucket
+    # shapes match, so sync_state is RESTORED, not re-zeroed
+    assert "residuals re-zeroed" not in r3.stdout, r3.stdout[-2000:]
+    assert "resharded" in r3.stdout
+    assert min(r["step"] for r in third) == 6
+    losses = ([r["loss"] for r in first] + [r["loss"] for r in second]
+              + [r["loss"] for r in third])
+    assert all(l == l and abs(l) != float("inf") for l in losses)
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.slow
+def test_reshard_refused_without_allow_reshard(tmp_path):
+    """A mesh change at resume time is a hard SpecMismatchError unless the
+    user consents with --allow-reshard; the error says which flag."""
+    ckpt = str(tmp_path / "ckpt")
+    base = ["--arch", "minitron_4b", "--smoke-config", "--sync", "cascade",
+            "--global-batch", "4", "--seq-len", "32", "--ckpt-dir", ckpt,
+            "--ckpt-every", "1"]
+    run_train(base + ["--mesh", "2x1", "--pods", "2", "--steps", "2"])
+    r = run_train(base + ["--mesh", "1x1", "--pods", "2", "--steps", "4",
+                          "--resume"], devices=2, expect_fail=True)
+    err = r.stderr       # train.py renders SpecMismatchError as "error: ..."
+    assert "different mesh shape" in err, err[-3000:]
+    assert "--allow-reshard" in err
+    assert "'dp': 2" in err and "'dp': 1" in err   # both shapes named
+
+
+@pytest.mark.slow
+def test_elastic_session_in_process_leave(tmp_path):
+    """In-process elastic run on 4 forced host devices: a member leaves at
+    step 2 via a callback, the session re-derives (2,2)->(1,2), fires
+    on_membership_change on user callbacks, and finishes the step budget."""
+    from conftest import subprocess_env
+    prog = f"""
+import dataclasses, json
+from repro.api import (Callback, CheckpointConfig, DataConfig, ElasticConfig,
+                       MeshSpec, RunSpec, SyncConfig, ElasticTrainSession)
+from repro.elastic import Membership
+
+mdir = {str(tmp_path / "members")!r}
+members = [Membership(mdir, member=f"w{{i}}", heartbeat_s=0.05)
+           for i in range(4)]
+for m in members:
+    m.join(); m.start_heartbeat()
+
+class Leaver(Callback):
+    def __init__(self):
+        self.changes = []
+    def on_step(self, session, record):
+        if record["step"] == 2:
+            members[3].leave()      # unlinks the member file immediately
+    def on_membership_change(self, old_mesh, new_mesh, step):
+        self.changes.append([old_mesh.pods, old_mesh.dp,
+                             new_mesh.pods, new_mesh.dp, step])
+
+spec = RunSpec(arch="minitron_4b", smoke=True, steps=8,
+               data=DataConfig(vocab=0, seed=0, global_batch=4, seq_len=32),
+               mesh=MeshSpec(pods=2, dp=2),
+               sync=SyncConfig(mode="cascade"),
+               ckpt=CheckpointConfig(dir={str(tmp_path / "ckpt")!r}, every=1),
+               elastic=ElasticConfig(enabled=True, dir=mdir,
+                                     heartbeat_s=0.05, allow_reshard=True))
+leaver = Leaver()
+sess = ElasticTrainSession(spec, callbacks=[leaver], membership=members[0])
+history = sess.run()
+for m in members:
+    m.stop_heartbeat()
+print("RESULT", json.dumps({{
+    "events": sess.events, "changes": leaver.changes,
+    "steps": [r["step"] for r in history],
+    "losses": [r["loss"] for r in history]}}))
+"""
+    env = subprocess_env(
+        XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert len(out["events"]) == 1, out["events"]
+    ev = out["events"][0]
+    assert ev["old_topology"] == [2, 2] and ev["new_topology"] == [1, 2]
+    assert out["changes"] == [[2, 2, 1, 2, ev["step"]]]
+    assert out["steps"][-1] == 7        # finished the budget post-reshard
+    assert out["losses"][-1] < out["losses"][0]

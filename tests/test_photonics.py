@@ -196,10 +196,12 @@ def test_fidelity_mesh_reproduces_behavioral_multidevice():
 
 def test_cascade_backend_still_validates_axes():
     """Photonic fidelities are legal for cascade now (the pipeline runs
-    both levels through the emulator — tests/test_pipeline.py), but a
-    cascade without its two-level axis split stays rejected."""
+    both levels through the emulator — tests/test_pipeline.py), and a
+    SINGLE-axis cascade degrades to one-level optinc (elastic shrink to
+    one pod — tests/test_elastic.py asserts bit-exactness), but a
+    cascade with NO axes stays rejected."""
     from repro.collectives import get_backend, SyncConfig
-    cfg = SyncConfig(mode="cascade", axes=("data",),
+    cfg = SyncConfig(mode="cascade", axes=(),
                      photonics=PhotonicsConfig(fidelity="mesh"))
     with pytest.raises(ValueError, match=">= 2 mesh axes"):
         get_backend("cascade").sync(jnp.zeros((8,)), cfg, None)
