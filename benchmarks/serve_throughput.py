@@ -19,6 +19,16 @@ workload first, which visits every power-of-two occupancy bucket the
 timed run can touch.  Rows mirror to results/bench/serve_throughput.json
 (CI artifact + perf-regression baseline).
 
+The decode_gather / decode_paged pair times the engine under both
+``ServeConfig.decode_backend`` values at max_active=8 and reports
+per-token latency percentiles (one engine.step() == one token for every
+active sequence, so step latency IS the inter-token latency a client
+sees).  On TPU 'paged' runs the Pallas in-place kernel
+(kernels.paged_attention) and the ratio measures skipping the
+page-gather copy; on CPU CI 'paged' dispatches to the identical gather
+XLA program, so paged_vs_gather sits at ~1.0 and the perf gate's floor
+only catches a real dispatch regression.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--full] [--smoke]
 """
 from __future__ import annotations
@@ -51,9 +61,10 @@ def _workload(n_seqs: int, vocab: int):
     return prompts, budgets
 
 
-def _drain_staggered(engine, prompts, budgets):
+def _drain_staggered(engine, prompts, budgets, step_times=None):
     """Submit ``max_active`` requests up front, then one more per decode
-    step (staggered arrivals), and run to empty.  Returns tokens emitted."""
+    step (staggered arrivals), and run to empty.  Returns tokens emitted;
+    appends each engine.step() wall time to ``step_times`` when given."""
     arrivals = list(zip(prompts, budgets))
     head = arrivals[:engine.scfg.max_active]
     rest = arrivals[len(head):]
@@ -62,7 +73,10 @@ def _drain_staggered(engine, prompts, budgets):
         if rest:
             p, b = rest.pop(0)
             rids.append(engine.submit(p, b))
+        t0 = time.time()
         engine.step()
+        if step_times is not None:
+            step_times.append(time.time() - t0)
     return sum(len(engine.results[r]) for r in rids)
 
 
@@ -81,6 +95,15 @@ def _engine_with(session, max_active: int):
     spec = dataclasses.replace(
         session.spec,
         serve=dataclasses.replace(session.spec.serve, max_active=max_active))
+    return ServeEngine(spec, params=session.params)
+
+
+def _engine_backend(session, backend: str):
+    from repro.serving.engine import ServeEngine
+    spec = dataclasses.replace(
+        session.spec,
+        serve=dataclasses.replace(session.spec.serve,
+                                  decode_backend=backend))
     return ServeEngine(spec, params=session.params)
 
 
@@ -124,6 +147,29 @@ def _run(full: bool, smoke: bool):
         raise RuntimeError(
             f"continuous batching ({cont_toks / cont_dt:.1f} tok/s) did not "
             f"beat sequential decode ({seq_toks / seq_dt:.1f} tok/s)")
+
+    # ---- decode backend: gather vs paged, with per-token latency tails
+    tok_s, lat = {}, {}
+    for backend in ("gather", "paged"):
+        eng = _engine_backend(session, backend)
+        _drain_staggered(eng, prompts, budgets)   # warm every bucket/shape
+        eng.results.clear()
+        times: list = []
+        t0 = time.time()
+        toks = _drain_staggered(eng, prompts, budgets, step_times=times)
+        dt = time.time() - t0
+        assert toks == seq_toks, (backend, toks, seq_toks)
+        tok_s[backend] = toks / dt
+        lat[backend] = (float(np.percentile(times, 50)),
+                        float(np.percentile(times, 99)))
+    ratio = tok_s["paged"] / tok_s["gather"]
+    for backend in ("gather", "paged"):
+        extra = f" paged_vs_gather={ratio:.2f}" if backend == "paged" else ""
+        emit(f"serve_throughput.decode_{backend}", 1e6 / tok_s[backend],
+             f"tok_s={tok_s[backend]:.1f} n_seqs={n_seqs} max_active="
+             f"{spec.serve.max_active} tok_lat_p50_ms="
+             f"{1e3 * lat[backend][0]:.2f} tok_lat_p99_ms="
+             f"{1e3 * lat[backend][1]:.2f}" + extra)
 
     if full:
         # concurrency scaling: same workload, shrinking slot counts

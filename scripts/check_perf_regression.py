@@ -23,7 +23,12 @@ just happened, e.g. the CI benchmarks-smoke job) against the committed
 * elastic rows (benchmarks.elastic, gated via ``--sections elastic`` in
   the CI chaos-smoke step) must keep ``recovered=`` at 1 — the
   SIGKILL'd 4-process cascade run re-derived the shrunk topology and
-  its post-recovery loss kept descending.
+  its post-recovery loss kept descending;
+* serving rows (benchmarks.serve_throughput) must keep
+  ``speedup_vs_sequential=`` above 1.0 (continuous batching beats
+  sequential decode) and ``paged_vs_gather=`` at or above the 0.9 noise
+  floor (the paged decode backend never loses to the gather path it
+  replaces — see SERVE_GATED below for why the floor is not 1.0).
 
   PYTHONPATH=src python scripts/check_perf_regression.py \
       [--sections mesh_emulation,fig7b,serve_throughput,overlap] \
@@ -59,6 +64,17 @@ OVERLAP_GATED = re.compile(r"^overlap\.")
 # kept descending.  Timing is not gated (us_per_call ~ 0 skips it);
 # recovery is binary.
 ELASTIC_GATED = re.compile(r"^elastic\.")
+
+# serving rows: continuous batching must keep beating sequential decode
+# (speedup_vs_sequential > 1), and the 'paged' decode backend may not
+# lose to the gather path it replaces.  On CPU CI 'paged' dispatches to
+# the identical gather XLA program (kernels.paged_attention.use_kernel),
+# so paged_vs_gather is runner noise around 1.0 — the 0.9 floor catches
+# a real dispatch regression (paged silently running a slower program),
+# not jitter; on TPU the same floor demands the kernel at least match
+# the gather copy it removes.
+SERVE_GATED = re.compile(r"^serve_throughput\.(continuous|decode_paged)$")
+PAGED_VS_GATHER_FLOOR = 0.9
 
 
 def load_rows(path: pathlib.Path) -> dict:
@@ -111,6 +127,19 @@ def check_section(section: str, tol: float, ratio_cap: float) -> list:
                     f"{section}: {name} losses_match={lm:g} — the "
                     f"streaming engine's losses diverged from the barrier "
                     f"path")
+        if SERVE_GATED.match(name):
+            sp = derived_field(frow, "speedup_vs_sequential")
+            if sp is not None and sp <= 1.0:
+                errors.append(
+                    f"{section}: {name} speedup_vs_sequential={sp:g} <= "
+                    f"1.0 — continuous batching stopped beating sequential "
+                    f"decode")
+            pg = derived_field(frow, "paged_vs_gather")
+            if pg is not None and pg < PAGED_VS_GATHER_FLOOR:
+                errors.append(
+                    f"{section}: {name} paged_vs_gather={pg:g} < "
+                    f"{PAGED_VS_GATHER_FLOOR:g} — the paged decode backend "
+                    f"lost to the gather path it replaces")
         if ELASTIC_GATED.match(name):
             rec = derived_field(frow, "recovered")
             if rec is not None and rec != 1:

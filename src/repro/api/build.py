@@ -109,6 +109,13 @@ def build_prefill_step(spec: RunSpec, cfg=None, mesh=None):
                                    remat_groups=m.remat_groups)
 
 
+def build_batched_prefill_step(spec: RunSpec, cfg=None, mesh=None):
+    """Packed multi-prompt serving prefill (lm.batched_prefill_step):
+    rows shard over the DP axes — the ServeEngine's prefill path."""
+    cfg, mesh = _parts(spec, cfg, mesh)
+    return steps.make_batched_prefill_step(cfg, mesh, fsdp=spec.mesh.fsdp)
+
+
 def build_decode_step(spec: RunSpec, cfg=None, mesh=None, *,
                       seq_shard_cache: bool = False,
                       batch_shardable: bool = True):

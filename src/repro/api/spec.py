@@ -403,6 +403,15 @@ class RunSpec:
         ap.add_argument("--reload-every", type=int,
                         help="serving: poll --ckpt-dir for newer params "
                              "every N engine steps (hot-swap; 0 = off)")
+        ap.add_argument("--decode-backend", choices=("gather", "paged"),
+                        help="serving: decode attention path — 'gather' "
+                             "copies pages contiguous, 'paged' attends "
+                             "over the pool in place (Pallas kernel on "
+                             "TPU, gather fallback elsewhere)")
+        ap.add_argument("--kv-dtype", choices=("auto", "f32", "bf16"),
+                        help="serving: KV pool storage dtype ('bf16' "
+                             "halves pool bytes; attention accumulates "
+                             "f32 either way)")
 
     @classmethod
     def from_args(cls, argv=None, description: str | None = None) -> "RunSpec":
@@ -482,7 +491,7 @@ class RunSpec:
         serve_kw = {}
         for k in ("page_size", "max_active", "max_queue", "max_seq",
                   "max_new_tokens", "stop_token", "temperature", "top_k",
-                  "reload_every"):
+                  "reload_every", "decode_backend", "kv_dtype"):
             if k in ns:
                 serve_kw[k] = ns.pop(k)
         if "serve_pages" in ns:

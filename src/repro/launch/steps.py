@@ -267,6 +267,25 @@ def make_prefill_step(cfg: ModelConfig, mesh, fsdp: bool = False,
     return fn, (specs, bspec), out_specs
 
 
+def make_batched_prefill_step(cfg: ModelConfig, mesh, fsdp: bool = False):
+    """Serving prefill over a packed (b, t) prompt batch with per-row
+    valid lengths (lm.batched_prefill_step) — rows shard over the DP
+    axes, so dp > 1 serving meshes keep their data axis busy during
+    prefill (the decode step stays replicated over 'data')."""
+    ctx = make_ctx(mesh, fsdp=fsdp)
+    specs = lm.flat_specs(cfg, ctx)
+
+    def step(params, tokens, lengths):
+        return lm.batched_prefill_step(cfg, ctx, params, tokens, lengths)
+
+    cache_spec = cache_specs(cfg, ctx)
+    in_specs = (specs, P(ctx.dp_axes, None), P(ctx.dp_axes))
+    out_specs = (P(ctx.dp_axes, "model"), cache_spec)
+    fn = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn, in_specs, out_specs
+
+
 def make_decode_step(cfg: ModelConfig, mesh, fsdp: bool = False,
                      seq_shard_cache: bool = False,
                      batch_shardable: bool = True):

@@ -100,14 +100,21 @@ def gqa_attention(ctx: ShardCtx, cfg: ModelConfig, p, x, pos,
 
 
 def gqa_decode_paged(ctx: ShardCtx, cfg: ModelConfig, p, x, lengths,
-                     pool_kv, page_table):
+                     pool_kv, page_table, backend: str = "gather"):
     """One paged decode step of GQA self-attention over a packed slot
     batch (continuous batching).  x: (b, 1, d) each slot's pending token;
     lengths: (b,) tokens already cached per slot (the new token's
     position); pool_kv: {"k","v"} physical page pools (P, hkv_local,
     page, hd); page_table: (b, nb) per-slot page ids.  Returns
     (out, new_pool_kv) — the same per-token math as the contiguous
-    gqa_attention decode branch, so outputs match it bit-exactly."""
+    gqa_attention decode branch, so outputs match it bit-exactly.
+
+    ``backend`` is ServeConfig.decode_backend: 'gather' materializes each
+    slot's pages contiguous (paged_gather) before decode_attention;
+    'paged' attends over the pool in place through the Pallas kernel
+    (kernels.paged_attention) where it compiles (TPU, or forced in
+    tests) and keeps the gather path as the bit-exact XLA fallback."""
+    from ..kernels import paged_attention as paged_kernel
     ps = pool_kv["k"].shape[2]
     q, k, v = _gqa_qkv(ctx, cfg, p, x, lengths[:, None])
     q = q.transpose(0, 2, 1, 3)                      # (b, hl, 1, hd)
@@ -117,8 +124,12 @@ def gqa_decode_paged(ctx: ShardCtx, cfg: ModelConfig, p, x, lengths,
                                    axis=1)[:, 0]
     kp = paged_update_cache(pool_kv["k"], k, page_ids, lengths % ps)
     vp = paged_update_cache(pool_kv["v"], v, page_ids, lengths % ps)
-    attn = decode_attention(ctx, q, paged_gather(kp, page_table),
-                            paged_gather(vp, page_table), lengths + 1)
+    if backend == "paged" and paged_kernel.use_kernel():
+        attn = paged_kernel.paged_attention(q, kp, vp, page_table,
+                                            lengths + 1)
+    else:
+        attn = decode_attention(ctx, q, paged_gather(kp, page_table),
+                                paged_gather(vp, page_table), lengths + 1)
     b, hl = q.shape[:2]
     attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, hl * cfg.hd)
     out = attn @ gather_fsdp(ctx, p["wo"], 1)

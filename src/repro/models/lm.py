@@ -771,7 +771,7 @@ def decode_step(cfg: ModelConfig, ctx: ShardCtx, params, cache, token,
 
 
 def paged_decode_step(cfg: ModelConfig, ctx: ShardCtx, params, pool,
-                      page_table, lengths, token):
+                      page_table, lengths, token, decode_backend="gather"):
     """One continuous-batching decode step over a paged KV pool
     (dense-attention transformer families — the serving engine's path;
     recurrent/enc-dec/MoE caches keep the contiguous decode_step).
@@ -779,7 +779,10 @@ def paged_decode_step(cfg: ModelConfig, ctx: ShardCtx, params, pool,
     pool: {"layers": {"k"/"v": (L, P, hkv_local, page, hd)}} physical
     pages shared by every slot; page_table: (b, nb) per-slot page ids;
     lengths: (b,) tokens already cached per slot; token: (b, 1) pending
-    tokens.  Returns (logits (b, V_local), new_pool)."""
+    tokens; decode_backend: ServeConfig.decode_backend ('gather'
+    materializes pages contiguous, 'paged' attends over the pool in
+    place — see blocks.gqa_decode_paged).  Returns (logits (b, V_local),
+    new_pool)."""
     assert not (cfg.ssm or cfg.enc_dec or cfg.moe), \
         f"paged decode needs a dense-attention cache, got {cfg.name}"
     x = embed_lookup(ctx, gather_fsdp(ctx, params["embed"], 1), token,
@@ -788,7 +791,8 @@ def paged_decode_step(cfg: ModelConfig, ctx: ShardCtx, params, pool,
     def body(x, pc):
         p, kv = pc
         a, nkv = blocks.gqa_decode_paged(ctx, cfg, p, x, lengths, kv,
-                                         page_table)
+                                         page_table,
+                                         backend=decode_backend)
         x = x + a
         h = rmsnorm(x, p["mlp_norm"])
         x = x + blocks.swiglu_mlp(ctx, h, p["w_gate"], p["w_up"], p["w_down"])
@@ -932,3 +936,36 @@ def prefill_step(cfg: ModelConfig, ctx: ShardCtx, params, tokens,
     logits = (h[:, 0] @ gather_fsdp(ctx, params["lm_head"], 0)
               ).astype(jnp.float32)
     return logits, cache
+
+
+def batched_prefill_step(cfg: ModelConfig, ctx: ShardCtx, params, tokens,
+                         lengths):
+    """Serving prefill over a PACKED prompt batch (dense-attention
+    families — the continuous-batching engine's path).
+
+    tokens: (b, t) right-padded prompts; lengths: (b,) valid tokens per
+    row (0 = inactive pad row, its outputs are discarded).  Right
+    padding is causal-harmless: position p only attends 0..p, so every
+    row's valid-prefix KV and last-position hidden state equal its solo
+    ``prefill_step`` run — pad-token KV beyond ``lengths`` is masked (or
+    zeroed before the page scatter, kv_pool.write_prompts) downstream.
+    Returns (per-row logits at position lengths-1 (b, V_local), cache
+    {"layers": {"k","v": (L, b, kvl, t, hd)}})."""
+    assert not (cfg.ssm or cfg.enc_dec or cfg.moe), \
+        f"batched prefill needs a dense-attention cache, got {cfg.name}"
+    b, t = tokens.shape
+    pos = jnp.arange(t)
+    x = embed_lookup(ctx, gather_fsdp(ctx, params["embed"], 1), tokens,
+                     cfg.vocab)
+
+    def body(x, p):
+        x, kv = _attn_mlp_layer(ctx, cfg, p, x, pos)
+        return x, kv
+
+    x, kvs = lax.scan(body, x, params["layers"])
+    x = sp_gather(ctx, x)
+    last = jnp.maximum(lengths, 1) - 1        # pad rows clamp to position 0
+    h = rmsnorm(x[jnp.arange(b), last][:, None], params["final_norm"])
+    logits = (h[:, 0] @ gather_fsdp(ctx, params["lm_head"], 0)
+              ).astype(jnp.float32)
+    return logits, {"layers": kvs}

@@ -9,14 +9,14 @@
 """
 from .config import ServeConfig
 from .kv_pool import NULL_PAGE, PageAllocator, init_pool, pool_specs, \
-    supports_paged, write_prompt
+    supports_paged, write_prompt, write_prompts
 from .scheduler import QueueFull, Request, Scheduler, Sequence
 
 __all__ = [
     "ServeConfig", "NULL_PAGE", "PageAllocator", "init_pool", "pool_specs",
-    "supports_paged", "write_prompt", "QueueFull", "Request", "Scheduler",
-    "Sequence", "ServeEngine", "ParamReloader", "load_params",
-    "resolve_params",
+    "supports_paged", "write_prompt", "write_prompts", "QueueFull",
+    "Request", "Scheduler", "Sequence", "ServeEngine", "ParamReloader",
+    "load_params", "resolve_params",
 ]
 
 _LAZY = {"ServeEngine": "engine",

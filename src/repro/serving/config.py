@@ -21,6 +21,15 @@ class ServeConfig:
     the reserved null page — no preemption possible; smaller values admit
     optimistically and preempt under pressure).  ``reload_every`` polls
     ``ckpt.dir`` for a newer checkpoint every N engine steps (hot-swap).
+
+    ``decode_backend`` selects the decode attention path: 'gather'
+    materializes each slot's pages contiguous before attending, 'paged'
+    attends over the pool in place through the Pallas kernel
+    (kernels.paged_attention — compiled on TPU, falls back to the
+    bit-exact gather math elsewhere).  ``kv_dtype`` is the pool storage
+    dtype: 'auto' follows the model dtype, 'bf16' halves pool bytes and
+    page-read traffic (attention still accumulates f32), 'f32' stores
+    full precision regardless of model dtype.
     """
     page_size: int = 16       # tokens per KV page
     max_active: int = 8       # concurrently decoding sequences (slots)
@@ -32,8 +41,16 @@ class ServeConfig:
     top_k: int = 0            # sample from the k best logits (0 = full vocab)
     pages: int = 0            # physical KV pool size in pages (0 = auto)
     reload_every: int = 0     # hot-swap poll period in engine steps (0 = off)
+    decode_backend: str = "gather"  # 'gather' | 'paged' (Pallas kernel)
+    kv_dtype: str = "auto"    # KV pool storage: 'auto' | 'f32' | 'bf16'
 
     def __post_init__(self):
+        if self.decode_backend not in ("gather", "paged"):
+            raise ValueError(f"serve.decode_backend must be 'gather' or "
+                             f"'paged', got {self.decode_backend!r}")
+        if self.kv_dtype not in ("auto", "f32", "bf16"):
+            raise ValueError(f"serve.kv_dtype must be 'auto', 'f32' or "
+                             f"'bf16', got {self.kv_dtype!r}")
         for name in ("page_size", "max_active", "max_queue", "max_seq",
                      "max_new_tokens"):
             if getattr(self, name) < 1:

@@ -1,18 +1,32 @@
 """ServeEngine: continuous-batching decode over the paged KV pool.
 
 One jitted decode step advances EVERY active sequence by one token:
-admitted sequences prefill through the compiled prefill step (their KV
-scattered into freshly-allocated pages), then join the packed slot
-batch.  Sequences finish (budget / stop token) and new arrivals are
-admitted between steps, so the batch membership changes continuously —
-the classic continuous-batching loop, vs. ServeSession.generate's
-static batch.
+admitted sequences prefill through ONE batched prefill launch (all of a
+step's admissions packed into a padded prompt batch, their KV scattered
+into freshly-allocated pages), then join the packed slot batch.
+Sequences finish (budget / stop token) and new arrivals are admitted
+between steps, so the batch membership changes continuously — the
+classic continuous-batching loop, vs. ServeSession.generate's static
+batch.
 
-The packed batch is padded to a power-of-two bucket (capped at
-``max_active``) so the decode step retraces O(log max_active) times,
-not once per occupancy.  Inactive pad rows carry length 0 and an
-all-null page table: they scatter into / gather from the reserved null
-page and their logits are discarded.
+Both launches bucket their dynamic dimensions to powers of two so the
+jitted programs retrace O(log) times, not once per shape: the decode
+batch pads to a pow2 occupancy bucket (capped at ``max_active``), the
+prefill batch pads rows the same way and prompt lengths to pow2
+page-aligned buckets.  Inactive pad rows carry length 0 and an all-null
+page table: they scatter into / gather from the reserved null page and
+their logits are discarded.
+
+Batched prefill shards its rows over the DP axes
+(steps.make_batched_prefill_step), so dp > 1 serving meshes are legal:
+prefill keeps the data axis busy while the decode step — whose packed
+batch is occupancy-dynamic — runs replicated over 'data' (its inputs
+carry no data-axis spec, every data shard computes identical tokens).
+
+``ServeConfig.decode_backend`` picks the decode attention path
+('gather' copies pages contiguous, 'paged' attends over the pool in
+place — kernels.paged_attention on TPU, bit-exact gather fallback
+elsewhere); ``ServeConfig.kv_dtype`` picks the pool storage dtype.
 
 repro.api is imported function-locally (api.spec imports
 serving.config — a module-level import here would cycle).
@@ -43,11 +57,6 @@ class ServeEngine:
                 f"paged serving covers the dense-attention families; "
                 f"{self.cfg.name} (ssm/enc-dec/moe) serves through "
                 f"ServeSession instead")
-        if spec.mesh.dp * spec.mesh.pods != 1:
-            raise NotImplementedError(
-                "ServeEngine shards over 'model' only (prefill runs one "
-                "sequence at a time and decode occupancy is dynamic — "
-                "neither can keep a data axis busy); use a 1xTP mesh")
         self.mesh = spec.mesh.build()
         # decode-path ctx: SP/remat are train-time concerns (mirrors
         # make_decode_step, which never enables them)
@@ -66,19 +75,30 @@ class ServeEngine:
                 spec, self.cfg, self.mesh, current_step=self.params_step)
 
         n_pages = self.scfg.auto_pages()
+        pspec = kv_pool.pool_specs(ctx)
         with jax.set_mesh(self.mesh):
             self.pool = kv_pool.init_pool(self.cfg, ctx, n_pages,
-                                          self.scfg.page_size)
+                                          self.scfg.page_size,
+                                          kv_dtype=self.scfg.kv_dtype)
+        # pin the pool to its steady-state sharding (the decode step's
+        # out_specs) up front: _write_prompts' jit cache keys on input
+        # sharding, so a fresh-from-init pool must not look different
+        # from one that has been through a decode step
+        from jax.sharding import NamedSharding
+        self.pool = jax.device_put(
+            self.pool, jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                    pspec))
         self.sched = Scheduler(self.scfg, kv_pool.PageAllocator(n_pages))
 
-        pre, _, _ = build.build_prefill_step(spec, self.cfg, self.mesh)
+        pre, _, _ = build.build_batched_prefill_step(spec, self.cfg,
+                                                     self.mesh)
         self._prefill = jax.jit(pre)
         p_specs = lm.flat_specs(self.cfg, ctx)
-        pspec = kv_pool.pool_specs(ctx)
 
         def step(params, pool, page_table, lengths, token):
-            return lm.paged_decode_step(self.cfg, ctx, params, pool,
-                                        page_table, lengths, token)
+            return lm.paged_decode_step(
+                self.cfg, ctx, params, pool, page_table, lengths, token,
+                decode_backend=self.scfg.decode_backend)
 
         self._decode = jax.jit(
             jax.shard_map(step, mesh=self.mesh,
@@ -87,8 +107,8 @@ class ServeEngine:
                           out_specs=(P(None, ctx.model_axis), pspec),
                           check_vma=False),
             donate_argnums=(1,))
-        self._write_prompt = jax.jit(kv_pool.write_prompt,
-                                     donate_argnums=(0,))
+        self._write_prompts = jax.jit(kv_pool.write_prompts,
+                                      donate_argnums=(0,))
 
         self.results: dict = {}      # rid -> list of generated token ids
         self.step_count = 0
@@ -116,8 +136,9 @@ class ServeEngine:
                       f"{self.params_step}", flush=True)
         emitted = []
         with jax.set_mesh(self.mesh):
-            for seq in self.sched.admit():
-                emitted += self._prefill_seq(seq)
+            admitted = self.sched.admit()
+            if admitted:
+                emitted += self._prefill_batch(admitted)
             self._ensure_growth()
             act = self.sched.active
             self.max_observed_active = max(self.max_observed_active, len(act))
@@ -156,18 +177,47 @@ class ServeEngine:
             if victim is seq:  # even alone it can't grow — re-queued
                 break
 
-    def _prefill_seq(self, seq: Sequence):
-        """Compiled prefill over prompt + any previously generated tokens
-        (preemption resume), KV scattered into the sequence's pages, and
-        the first token sampled from the prefill logits."""
-        req = seq.req
-        feed = req.prompt + req.generated
-        logits, pkv = self._prefill(
-            self.params, {"tokens": jnp.asarray([feed], jnp.int32)})
-        self.pool = self._write_prompt(self.pool, pkv,
-                                       jnp.asarray(seq.pages, jnp.int32))
-        t = int(self._sample(logits, [seq])[0])
-        return self._push_token(seq, t)
+    def _len_bucket(self, t: int) -> int:
+        """Prompt-length bucket: pow2 rounded up to a whole number of
+        pages, capped at capacity — one compiled prefill per bucket."""
+        ps = self.scfg.page_size
+        tb = -(-max(ps, 1 << (t - 1).bit_length()) // ps) * ps
+        return min(tb, self.scfg.capacity)
+
+    def _row_bucket(self, n: int) -> int:
+        """Prefill row bucket: the decode occupancy bucketing (pow2,
+        capped at max_active), rounded up to a multiple of the DP degree
+        so the batch axis shards evenly under dp > 1 meshes."""
+        b = min(max(1, 1 << (n - 1).bit_length()), self.scfg.max_active)
+        dpt = self.spec.mesh.dp * self.spec.mesh.pods
+        return -(-max(b, n) // dpt) * dpt
+
+    def _prefill_batch(self, seqs):
+        """ONE padded prefill launch for every sequence admitted this
+        step: prompts (+ previously generated tokens — preemption
+        resume) right-padded into a pow2 page-aligned length bucket,
+        rows padded to the occupancy bucket, each row's KV scattered
+        into its own pages and its first token sampled from its own
+        last-position logits.  Pad rows carry length 0: write_prompts
+        drops their KV and their logits are discarded."""
+        feeds = [s.req.prompt + s.req.generated for s in seqs]
+        n = len(feeds)
+        tb = self._len_bucket(max(len(f) for f in feeds))
+        bb = self._row_bucket(n)
+        tok = np.zeros((bb, tb), np.int32)
+        ln = np.zeros((bb,), np.int32)
+        pt = np.zeros((bb, tb // self.scfg.page_size), np.int32)
+        for i, (seq, feed) in enumerate(zip(seqs, feeds)):
+            tok[i, :len(feed)] = feed
+            ln[i] = len(feed)
+            pt[i, :len(seq.pages)] = seq.pages
+        ln = jnp.asarray(ln)
+        logits, pkv = self._prefill(self.params, jnp.asarray(tok), ln)
+        self.pool = self._write_prompts(self.pool, pkv, jnp.asarray(pt), ln)
+        emitted = []
+        for seq, t in zip(seqs, self._sample(logits[:n], seqs)):
+            emitted += self._push_token(seq, int(t))
+        return emitted
 
     def _push_token(self, seq: Sequence, tok: int):
         seq.req.generated.append(tok)

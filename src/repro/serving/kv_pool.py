@@ -73,12 +73,17 @@ class PageAllocator:
 
 
 def init_pool(cfg: ModelConfig, ctx: ShardCtx, n_pages: int,
-              page_size: int):
-    """Zeroed physical page pool, dense-family layout (see module doc)."""
+              page_size: int, kv_dtype: str = "auto"):
+    """Zeroed physical page pool, dense-family layout (see module doc).
+    ``kv_dtype`` is ServeConfig.kv_dtype: 'auto' follows the model dtype;
+    'bf16' halves pool bytes (decode_attention and the paged kernel both
+    accumulate f32 regardless of storage dtype); 'f32' stores full
+    precision."""
     assert supports_paged(cfg), cfg.name
     dims = lm.ArchDims.build(cfg, ctx)
     kvl = dims.kv_pad // ctx.tp
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = {"auto": jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+          "f32": jnp.float32, "bf16": jnp.bfloat16}[kv_dtype]
     shape = (cfg.n_layers, n_pages, kvl, page_size, cfg.hd)
     return {"layers": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
 
@@ -103,4 +108,33 @@ def write_prompt(pool, prefill_cache, pages):
         kv = jnp.pad(kv[:, 0], ((0, 0), (0, 0), (0, nb * ps - t), (0, 0)))
         tiles = kv.reshape(n_layers, kvl, nb, ps, hd).transpose(0, 2, 1, 3, 4)
         return pl.at[:, pages].set(tiles.astype(pl.dtype))
+    return jax.tree.map(leaf, pool, prefill_cache)
+
+
+def write_prompts(pool, prefill_cache, page_tables, lengths):
+    """Scatter a BATCHED prefill KV cache into each row's pages — the
+    one-launch form of ``write_prompt`` the batched-prefill engine path
+    uses.  pool leaf: (L, P, kvl, ps, hd); prefill leaf: (L, b, kvl, t,
+    hd) with t a multiple of ps (the engine's page-aligned length
+    bucket); page_tables: (b, t // ps) page ids in logical-block order,
+    null page 0 for blocks beyond a row's allocation; lengths: (b,)
+    valid tokens per row (0 = inactive pad row).
+
+    Positions >= a row's length are zeroed before the scatter (pad-token
+    KV never lands in the pool — the tail of the last page stays zero,
+    matching write_prompt), and the null page — hit by every pad row and
+    unallocated block — is re-zeroed afterwards, so its contents stay
+    the all-zero invariant the tests pin down."""
+    def leaf(pl, kv):
+        n_layers, _, kvl, ps, hd = pl.shape
+        b, t = kv.shape[1], kv.shape[3]
+        nb = t // ps
+        valid = jnp.arange(t)[None, :] < lengths[:, None]          # (b, t)
+        kv = jnp.where(valid[None, :, None, :, None], kv, 0)
+        tiles = kv.reshape(n_layers, b, kvl, nb, ps, hd)
+        tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(
+            n_layers, b * nb, kvl, ps, hd)
+        out = pl.at[:, page_tables.reshape(b * nb)].set(
+            tiles.astype(pl.dtype))
+        return out.at[:, NULL_PAGE].set(0)
     return jax.tree.map(leaf, pool, prefill_cache)

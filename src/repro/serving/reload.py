@@ -15,6 +15,8 @@ serving.config, so a module-level import here would cycle.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 from ..checkpoint.ckpt import latest_step, load_checkpoint
@@ -55,6 +57,13 @@ class ParamReloader:
     writes are invisible because ``save_checkpoint`` os.replace()'s the
     step directory atomically and ``latest_step`` skips anything without
     a readable manifest.
+
+    The idle path costs one ``os.stat``: a new checkpoint necessarily
+    changes the directory's mtime (``os.replace`` of the step dir into
+    it), so the manifest listing/parsing only runs when the stat says
+    something moved.  The stat is taken BEFORE the listing — a
+    checkpoint landing between the two is seen by this poll or bumps the
+    mtime past the recorded one, never silently skipped.
     """
 
     def __init__(self, spec, cfg, mesh, current_step=None):
@@ -64,9 +73,17 @@ class ParamReloader:
         self.cfg = cfg
         self.mesh = mesh
         self.current_step = -1 if current_step is None else current_step
+        self._dir_mtime_ns = None
 
     def poll(self):
+        try:
+            mtime = os.stat(self.spec.ckpt.dir).st_mtime_ns
+        except OSError:
+            return None  # directory not created yet — nothing to swap to
+        if mtime == self._dir_mtime_ns:
+            return None
         step = latest_step(self.spec.ckpt.dir)
+        self._dir_mtime_ns = mtime
         if step is None or step <= self.current_step:
             return None
         params = load_params(self.spec, self.cfg, self.mesh, step)

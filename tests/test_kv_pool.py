@@ -9,7 +9,8 @@ import pytest
 from repro.models.layers import (ShardCtx, paged_gather, paged_update_cache,
                                  update_cache)
 from repro.serving import (NULL_PAGE, PageAllocator, ServeConfig, init_pool,
-                           pool_specs, supports_paged, write_prompt)
+                           pool_specs, supports_paged, write_prompt,
+                           write_prompts)
 
 # --------------------------------------------------------------- allocator
 
@@ -159,6 +160,74 @@ def test_paged_decode_write_matches_update_cache():
     for i in range(b):
         np.testing.assert_array_equal(np.asarray(got[i]),
                                       np.asarray(refs[i][0]))
+
+
+def test_paged_write_crosses_page_boundary():
+    """Writes at length % page_size == 0 land at offset 0 of the NEXT
+    logical block — the freshly allocated page a just-grown sequence
+    decodes into — and gathering back still matches the contiguous
+    update_cache write."""
+    ctx = ShardCtx()
+    rng = np.random.default_rng(5)
+    b, kvl, ps, hd, nb = 3, 2, 4, 8, 3
+    lengths = np.asarray([4, 8, 3])   # page-exact x2, plus a mid-page row
+    new = jnp.asarray(rng.normal(size=(b, kvl, 1, hd)), jnp.float32)
+    contig = jnp.zeros((b, kvl, nb * ps, hd), jnp.float32)
+    refs = [update_cache(contig[i:i + 1], new[i:i + 1], int(lengths[i]), ctx)
+            for i in range(b)]
+    pool = jnp.zeros((1 + b * nb, kvl, ps, hd), jnp.float32)
+    table = np.arange(1, 1 + b * nb, dtype=np.int32).reshape(b, nb)
+    page_ids = jnp.asarray(
+        [table[i, lengths[i] // ps] for i in range(b)], jnp.int32)
+    pool = paged_update_cache(pool, new, page_ids,
+                              jnp.asarray(lengths % ps, jnp.int32))
+    got = paged_gather(pool, jnp.asarray(table))
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(refs[i][0]))
+        # the boundary write touched exactly one position in one page
+        touched = np.asarray(pool[table[i]]).transpose(1, 0, 2, 3).reshape(
+            kvl, nb * ps, hd)
+        assert (np.abs(touched).sum(axis=(0, 2)) > 0).sum() == 1
+    # previous pages (the pages BEFORE the boundary) stay untouched zeros
+    assert np.all(np.asarray(pool[table[0, 0]]) == 0)   # row 0 wrote page 1
+    assert np.all(np.asarray(pool[table[1, :2]]) == 0)  # row 1 wrote page 2
+
+
+def test_write_prompts_matches_per_row_write_prompt():
+    """The batched prefill scatter equals per-row write_prompt for every
+    live row, drops pad-token KV past each row's length, writes nothing
+    for length-0 pad rows, and leaves the null page all-zero even though
+    pad rows and unallocated blocks scatter into it."""
+    cfg = _cfg()
+    ctx = ShardCtx()
+    ps, tb = 4, 12                     # bucket = 3 blocks
+    kvl, hd, n_pages = 2, cfg.hd, 12
+    rng = np.random.default_rng(6)
+    lengths = np.asarray([5, 12, 0], np.int32)   # partial, full, pad row
+    b = len(lengths)
+    pre = {"layers": {
+        leaf: jnp.asarray(
+            rng.normal(size=(cfg.n_layers, b, kvl, tb, hd)), jnp.float32)
+        for leaf in ("k", "v")}}
+    tables = np.zeros((b, tb // ps), np.int32)
+    tables[0, :2] = [3, 5]
+    tables[1, :3] = [1, 7, 2]
+    pool0 = {"layers": {
+        leaf: jnp.zeros((cfg.n_layers, n_pages, kvl, ps, hd), jnp.float32)
+        for leaf in ("k", "v")}}
+    got = write_prompts(pool0, pre, jnp.asarray(tables),
+                        jnp.asarray(lengths))
+    # reference: per-row write_prompt over the row's valid prefix
+    ref = pool0
+    for i in range(2):                 # live rows only
+        t, used = int(lengths[i]), -(-int(lengths[i]) // ps)
+        row = jax.tree.map(lambda kv: kv[:, i:i + 1, :, :t], pre)
+        ref = write_prompt(ref, row, jnp.asarray(tables[i, :used]))
+    for leaf in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(got["layers"][leaf]),
+                                      np.asarray(ref["layers"][leaf]))
+        assert np.all(np.asarray(got["layers"][leaf][:, NULL_PAGE]) == 0)
 
 
 def test_decode_attention_vector_positions_match_scalar():

@@ -1,7 +1,10 @@
 """repro.serving end-to-end: ServeConfig threading through RunSpec,
-engine-vs-session greedy parity under staggered arrivals, preemption
-resume, checkpoint hot-swap, and the prefill-seeded generate path."""
+engine-vs-session greedy parity under staggered arrivals (both decode
+backends), preemption resume, checkpoint hot-swap, dp>1 serving, and
+the prefill-seeded generate path."""
 import dataclasses
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -43,11 +46,13 @@ def test_serve_cli_overlay():
     spec = RunSpec.from_args(
         ["--arch", "minitron_4b", "--smoke-config", "--page-size", "8",
          "--max-active", "4", "--max-seq", "64", "--temperature", "0.5",
-         "--top-k", "3", "--serve-pages", "9", "--max-new-tokens", "12"])
+         "--top-k", "3", "--serve-pages", "9", "--max-new-tokens", "12",
+         "--decode-backend", "paged", "--kv-dtype", "bf16"])
     s = spec.serve
     assert (s.page_size, s.max_active, s.max_seq) == (8, 4, 64)
     assert (s.temperature, s.top_k, s.pages, s.max_new_tokens) \
         == (0.5, 3, 9, 12)
+    assert (s.decode_backend, s.kv_dtype) == ("paged", "bf16")
 
 
 def test_serve_config_validation():
@@ -61,22 +66,29 @@ def test_serve_config_validation():
         ServeConfig(page_size=0)
     with pytest.raises(ValueError, match="temperature"):
         ServeConfig(temperature=-1.0)
+    with pytest.raises(ValueError, match="decode_backend"):
+        ServeConfig(decode_backend="contiguous")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeConfig(kv_dtype="fp8")
 
 
-def test_engine_rejects_unpaged_and_dp_meshes():
-    from repro.api import MeshSpec
-    with pytest.raises(NotImplementedError, match="1xTP"):
-        ServeEngine(dataclasses.replace(
-            serve_spec(), mesh=MeshSpec(dp=2),
-            data=dataclasses.replace(tiny_spec().data, global_batch=4)))
+def test_engine_rejects_unpaged_arch():
+    # ssm/enc-dec/moe caches have no paged layout; they serve through
+    # ServeSession (dp>1 dense meshes are legal now — batched prefill
+    # shards its rows, decode runs replicated)
+    with pytest.raises(NotImplementedError, match="ServeSession"):
+        ServeEngine(dataclasses.replace(serve_spec(), arch="xlstm_125m"))
 
 
 # ------------------------------------------------- engine/session parity
-def test_engine_matches_session_under_staggered_load():
+@pytest.mark.parametrize("backend", ["gather", "paged"])
+def test_engine_matches_session_under_staggered_load(backend):
     """>= 8 concurrent sequences, staggered arrival and completion: every
     request's greedy tokens equal the single-sequence ServeSession path
-    bit for bit (prefill==decode parity + null-page masking)."""
-    spec = serve_spec()
+    bit for bit (prefill==decode parity + null-page masking).  Runs under
+    BOTH decode backends — off-TPU 'paged' dispatches to the gather math,
+    so the equality stays bitwise."""
+    spec = serve_spec(decode_backend=backend)
     sess = ServeSession(spec)
     eng = sess.engine()
     prompts = _prompts(10, sess.cfg.vocab)
@@ -115,6 +127,86 @@ def test_engine_preemption_resumes_exactly():
         ref = np.asarray(sess.generate(np.asarray([p]), gen_len=8,
                                        max_seq=32))[0]
         np.testing.assert_array_equal(np.asarray(eng.results[rid]), ref)
+
+
+def test_engine_paged_kernel_interpreted_matches_gather():
+    """FORCE_KERNEL routes the 'paged' backend through the interpreted
+    Pallas kernel on CPU; the greedy tokens still match the gather
+    engine (online softmax agrees to ~1e-7, far inside the argmax
+    margin on these logits)."""
+    from repro.kernels import paged_attention as pk
+    eng_g = ServeEngine(serve_spec(decode_backend="gather"))
+    prompts = _prompts(4, eng_g.cfg.vocab, seed=4)
+    ref = eng_g.serve(prompts, max_new_tokens=6)
+    pk.FORCE_KERNEL = True
+    try:
+        eng_p = ServeEngine(serve_spec(decode_backend="paged"),
+                            params=eng_g.params)
+        got = eng_p.serve(prompts, max_new_tokens=6)
+    finally:
+        pk.FORCE_KERNEL = None
+    assert sorted(got) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(np.asarray(got[rid]),
+                                      np.asarray(ref[rid]))
+
+
+def test_engine_kv_dtype_f32_pool():
+    """kv_dtype='f32' upcasts the pool (model KV is bf16 -> exact) and
+    the engine still serves full budgets; 'auto' follows the model."""
+    import jax.numpy as jnp
+    eng = ServeEngine(serve_spec(kv_dtype="f32"))
+    assert eng.pool["layers"]["k"].dtype == jnp.float32
+    out = eng.serve(_prompts(3, eng.cfg.vocab, seed=5), max_new_tokens=5)
+    assert all(len(v) == 5 for v in out.values())
+    eng_auto = ServeEngine(serve_spec(), params=eng.params)
+    assert eng_auto.pool["layers"]["k"].dtype == jnp.bfloat16
+
+
+_DP2_PROG = """\
+import dataclasses
+import numpy as np
+from repro.api import (AdamWConfig, DataConfig, MeshSpec, RunSpec,
+                       ServeConfig, SyncConfig)
+from repro.serving.engine import ServeEngine
+
+def spec(dp, gb):
+    return RunSpec(arch="minitron_4b", smoke=True, steps=6,
+                   sync=SyncConfig(mode="optinc", bits=8, block=256),
+                   optim=AdamWConfig(lr=1e-3),
+                   data=DataConfig(vocab=0, seq_len=32, global_batch=gb,
+                                   seed=0),
+                   mesh=MeshSpec(dp=dp),
+                   serve=ServeConfig(page_size=4, max_active=8, max_seq=32,
+                                     max_queue=32))
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, 128, (int(rng.integers(3, 11)),)).tolist()
+           for _ in range(6)]
+e1 = ServeEngine(spec(1, 2))
+out1 = e1.serve(prompts, max_new_tokens=6)
+e2 = ServeEngine(spec(2, 4), params=e1.params)
+out2 = e2.serve(prompts, max_new_tokens=6)
+assert sorted(out1) == sorted(out2)
+for rid in out1:
+    np.testing.assert_array_equal(out1[rid], out2[rid])
+print("DP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_dp2_matches_dp1():
+    """dp=2 serving meshes are legal now: batched prefill shards its
+    rows over 'data', decode runs replicated, and the served tokens are
+    bit-equal to the dp=1 engine (same process, same params)."""
+    from conftest import subprocess_env
+    r = subprocess.run(
+        [sys.executable, "-c", _DP2_PROG],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(
+            XLA_FLAGS="--xla_force_host_platform_device_count=2"))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DP_OK" in r.stdout
 
 
 def test_engine_stop_token_and_sampling():
@@ -161,6 +253,40 @@ def test_hot_swap_picks_up_newer_checkpoint_mid_serve(tmp_path):
     ref = np.asarray(sess_new.generate(np.asarray([prompts[1]]), gen_len=6,
                                        max_seq=32))[0]
     np.testing.assert_array_equal(np.asarray(eng.results[rid1]), ref)
+
+
+def test_reloader_stat_guard_skips_idle_listings(tmp_path, monkeypatch):
+    """Idle polls cost one os.stat: the directory listing / manifest
+    parse (latest_step) only runs when the checkpoint dir's mtime moved.
+    A checkpoint landing after the guard armed is still picked up."""
+    from repro.serving import reload as reload_mod
+    spec = dataclasses.replace(
+        serve_spec(reload_every=1),
+        ckpt=CheckpointConfig(dir=str(tmp_path), resume=True))
+    cfg = spec.model_config()
+    p0 = lm.init_params(cfg, spec.mesh.ctx(), jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 1, p0)
+
+    mesh = spec.mesh.build()
+    r = reload_mod.ParamReloader(spec, cfg, mesh)
+    calls = {"n": 0}
+    real = reload_mod.latest_step
+
+    def counting(d):
+        calls["n"] += 1
+        return real(d)
+
+    monkeypatch.setattr(reload_mod, "latest_step", counting)
+    got = r.poll()
+    assert got is not None and got[1] == 1
+    n_loaded = calls["n"]
+    for _ in range(5):
+        assert r.poll() is None          # idle: stat short-circuits
+    assert calls["n"] == n_loaded        # no listings while idle
+    save_checkpoint(tmp_path, 3, p0)     # dir mtime moves
+    got = r.poll()
+    assert got is not None and got[1] == 3
+    assert calls["n"] == n_loaded + 1
 
 
 # ------------------------------------- prefill-seeded generate (session)
